@@ -1,0 +1,48 @@
+"""Paper Fig. 6: end-to-end accuracy of ECCO vs baselines across
+(a) compute budgets (micro-windows per retraining window — the GPU
+count analogue) and (b) shared-bandwidth budgets.
+
+All frameworks run the same fleet (2 regions x 3 streams, one drift
+event) and the same substrate; only the coordination differs:
+  naive — independent jobs, round-robin compute, equal bandwidth
+  ekya  — independent jobs, greedy microprofiled compute
+  recl  — ekya + model-zoo reuse
+  ecco  — group retraining + Alg.1 compute + GAIMD bandwidth
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows, make_engine, run_framework
+from repro.data.streams import make_fleet
+
+WINDOWS = 8
+
+
+def run():
+    rows = Rows("end_to_end")
+    engine = make_engine()
+
+    # --- (a) accuracy vs compute budget at constrained bandwidth -------
+    for budget in (4, 8, 16):
+        for fw in ("naive", "ekya", "recl", "ecco"):
+            _, streams = make_fleet(regions=2, streams_per_region=3,
+                                    switch_times=(10.0,), seed=0)
+            ctl = run_framework(fw, engine, streams, windows=WINDOWS,
+                                window_micro=budget,
+                                shared_bandwidth=96.0)
+            rows.add(f"gpu{budget}_{fw}_acc", ctl.mean_accuracy(last_k=3))
+
+    # --- (b) accuracy vs shared bandwidth at fixed compute -------------
+    for bw in (24.0, 48.0, 192.0):
+        for fw in ("naive", "recl", "ecco"):
+            _, streams = make_fleet(regions=2, streams_per_region=3,
+                                    switch_times=(10.0,), seed=0)
+            ctl = run_framework(fw, engine, streams, windows=WINDOWS,
+                                window_micro=8, shared_bandwidth=bw)
+            rows.add(f"bw{int(bw)}_{fw}_acc", ctl.mean_accuracy(last_k=3))
+    return rows.emit()
+
+
+if __name__ == "__main__":
+    run()

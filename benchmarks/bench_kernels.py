@@ -1,0 +1,89 @@
+"""Kernel micro-benchmarks: wall time of the XLA substrate paths on CPU
+(this container's measurable proxy) + interpret-mode correctness spot
+checks. TPU roofline expectations are derived in EXPERIMENTS.md from the
+dry-run; these numbers track substrate regressions across commits.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows
+
+
+def _time(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6    # us
+
+
+def run():
+    rows = Rows("kernels")
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # attention (XLA blockwise exact) — train-ish shape
+    from repro.kernels import ref
+    B, S, H, K, hd = 2, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    att = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    rows.add("attention_xla_512_us", _time(att, q, k, v))
+    flops = 4 * B * S * S * H * hd
+    rows.add("attention_512_gflops",
+             flops / (_time(att, q, k, v) * 1e-6) / 1e9)
+
+    # mLSTM chunked (XLA)
+    from repro.models.xlstm import mlstm_chunked
+    B, S, H, P = 2, 512, 4, 64
+    qm = jax.random.normal(ks[3], (B, S, H, P))
+    ig = jax.random.normal(ks[4], (B, S, H))
+    fg = jax.random.normal(ks[5], (B, S, H)) + 1
+    ml = jax.jit(lambda q, i, f: mlstm_chunked(q, q, q, i, f, chunk=64))
+    rows.add("mlstm_xla_512_us", _time(ml, qm, ig, fg))
+
+    # SSD chunked (XLA)
+    from repro.models.ssm import ssd_chunked
+    N = 16
+    x = jax.random.normal(ks[6], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (B, S, H)))
+    A = -jnp.ones((H,))
+    Bm = jax.random.normal(ks[0], (B, S, N))
+    Cm = jax.random.normal(ks[1], (B, S, N))
+    D = jnp.ones((H,))
+    sd = jax.jit(lambda x, dt, Bm, Cm: ssd_chunked(x, dt, A, Bm, Cm, D,
+                                                   chunk=64))
+    rows.add("ssd_xla_512_us", _time(sd, x, dt, Bm, Cm))
+
+    # GAIMD simulator throughput (control-plane scalability: 4096 flows)
+    from repro.core import gaimd
+    alpha = np.ones(4096, np.float32)
+    beta = np.full(4096, 0.5, np.float32)
+    caps = np.full(4096, np.inf, np.float32)
+    t0 = time.perf_counter()
+    gaimd.steady_state_rates(alpha, beta, caps, 1000.0, steps=2000)
+    rows.add("gaimd_4096flows_2000rtt_ms",
+             (time.perf_counter() - t0) * 1e3)
+
+    # interpret-mode spot correctness (kernels vs oracle)
+    from repro.kernels.flash_attention import flash_attention
+    q2 = q[:1, :128]
+    k2 = k[:1, :128]
+    v2 = v[:1, :128]
+    o1 = flash_attention(q2, k2, v2, interpret=True, q_block=64,
+                         kv_block=64)
+    o2 = ref.attention_ref(q2, k2, v2)
+    rows.add("flash_attention_interpret_maxdiff",
+             float(jnp.max(jnp.abs(o1 - o2))))
+    return rows.emit()
+
+
+if __name__ == "__main__":
+    run()

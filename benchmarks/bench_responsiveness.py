@@ -1,0 +1,98 @@
+"""Paper Fig. 12 + 13: responsiveness.
+
+Fig. 12 (natural model reuse): streams join an ongoing group job one
+window apart; later joiners must start from the group's already-adapted
+model — higher initial accuracy than a cold start (and than a stale
+zoo model).
+
+Fig. 13 (data aggregation): time-to-threshold under per-stream uplink
+caps. Group retraining aggregates three trickles into one usable stream;
+independent retraining waits on a single trickle.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows, make_engine
+from repro.core.grouping import Request
+from repro.core.trainer import RetrainJob
+from repro.data.streams import DomainBank
+
+VOCAB = 64
+THRESHOLD = 0.35
+
+
+def _req(bank, rng, sid, dom):
+    toks = bank.sample(dom, rng, 4, 32)
+    return Request(stream_id=sid, t=0.0, loc=(0, 0), subsamples=toks,
+                   acc=0.0, train_data=toks)
+
+
+def run():
+    rows = Rows("responsiveness")
+    engine = make_engine()
+    bank = DomainBank(VOCAB, 4, dim=4, seed=0)
+    rng = np.random.default_rng(0)
+    dom = 0
+
+    # ---- Fig. 12: natural model reuse --------------------------------
+    job = RetrainJob(engine, _req(bank, rng, "s0", dom), micro_steps=4,
+                     batch=16, seed=0)
+    initial = {}
+    for w, joiner in ((0, None), (1, "s1"), (2, "s2")):
+        if joiner:
+            ev = bank.sample(dom, rng, 16, 32)
+            initial[joiner + "_group"] = engine.accuracy(
+                job.state["params"], ev)          # joiner's t0 accuracy
+            cold = engine.fresh_state(1)
+            initial[joiner + "_cold"] = engine.accuracy(cold["params"],
+                                                        ev)
+            job.add_member(_req(bank, rng, joiner, dom))
+        job.ingest(bank.sample(dom, rng, 8, 32))
+        for _ in range(3):
+            job.train_micro()
+    for k, v in initial.items():
+        rows.add(f"fig12_initial_{k}", v)
+    rows.add("fig12_reuse_beats_cold",
+             int(initial["s1_group"] > initial["s1_cold"] + 0.1 and
+                 initial["s2_group"] > initial["s2_cold"] + 0.1))
+
+    # ---- Fig. 13: data aggregation under low uplinks -----------------
+    # each stream can deliver only 2 seqs/window; threshold accuracy
+    for caps_label, per_stream in (("low_bw", 2), ("very_low_bw", 1)):
+        ev = bank.sample(dom, rng, 16, 32)
+
+        # group: 3 trickles aggregate
+        g = RetrainJob(engine, _req(bank, rng, "g0", dom), micro_steps=4,
+                       batch=16, seed=0)
+        g.add_member(_req(bank, rng, "g1", dom))
+        g.add_member(_req(bank, rng, "g2", dom))
+        t_group = None
+        for w in range(12):
+            for _ in range(3):
+                g.ingest(bank.sample(dom, rng, per_stream, 32))
+            g.train_micro()
+            if t_group is None and \
+                    engine.accuracy(g.state["params"], ev) >= THRESHOLD:
+                t_group = w + 1
+        # independent: one trickle
+        j = RetrainJob(engine, _req(bank, rng, "i0", dom), micro_steps=4,
+                       batch=16, seed=0)
+        t_ind = None
+        for w in range(12):
+            j.ingest(bank.sample(dom, rng, per_stream, 32))
+            j.train_micro()
+            if t_ind is None and \
+                    engine.accuracy(j.state["params"], ev) >= THRESHOLD:
+                t_ind = w + 1
+        rows.add(f"fig13_{caps_label}_group_windows_to_{THRESHOLD}",
+                 t_group if t_group else ">12")
+        rows.add(f"fig13_{caps_label}_indep_windows_to_{THRESHOLD}",
+                 t_ind if t_ind else ">12")
+        if t_group and t_ind:
+            rows.add(f"fig13_{caps_label}_speedup", t_ind / t_group)
+    return rows.emit()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Roofline summary table from the multi-pod dry-run results
+(dryrun_results.json — produced by repro.launch.dryrun). This is the
+source for EXPERIMENTS.md §Roofline: per (arch x shape x mesh) the three
+roofline terms, the dominant bottleneck, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Rows
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.json")
+
+
+def run():
+    rows = Rows("roofline")
+    if not os.path.exists(RESULTS):
+        rows.add("status", "missing dryrun_results.json — run "
+                 "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return rows.emit()
+    with open(RESULTS) as f:
+        results = json.load(f)
+    ok = [r for r in results if r["status"] == "ok"]
+    skip = [r for r in results if r["status"].startswith("skip")]
+    rows.add("cells_ok", len(ok))
+    rows.add("cells_skipped_documented", len(skip))
+    rows.add("cells_error", len(results) - len(ok) - len(skip))
+    for r in ok:
+        key = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        t = r["roofline"]
+        rows.add(f"{key}.compute_s", t["compute_s"])
+        rows.add(f"{key}.memory_s", t["memory_s"])
+        rows.add(f"{key}.collective_s", t["collective_s"])
+        rows.add(f"{key}.dominant", r["dominant"].replace("_s", ""))
+        rows.add(f"{key}.useful_flops_ratio", r["useful_flops_ratio"])
+        rows.add(f"{key}.roofline_fraction", r["roofline_fraction"])
+    # fleet-level aggregates
+    fracs = [r["roofline_fraction"] for r in ok]
+    rows.add("mean_roofline_fraction", sum(fracs) / len(fracs))
+    worst = min(ok, key=lambda r: r["roofline_fraction"])
+    rows.add("worst_cell",
+             f"{worst['arch']}.{worst['shape']}.{worst['mesh']}")
+    return rows.emit()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,104 @@
+"""Paper Fig. 2c + Fig. 8: group vs independent retraining as a function
+of cross-stream similarity.
+
+High similarity   — all 3 streams in one region (same domain trajectory)
+Medium similarity — 2 streams share a domain, 1 drifts to a neighbour
+                    domain mixture
+Low similarity    — 3 streams on 3 unrelated domains
+
+Group retraining trains ONE model on the pooled inflow with the full
+micro-window budget; independent retrains one model per stream with 1/3
+of the budget each. The paper's claim: group wins at high similarity,
+the advantage shrinks with similarity, and roughly vanishes (or
+reverses) at low similarity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows, make_engine
+from repro.core.grouping import Request
+from repro.core.trainer import RetrainJob
+from repro.data.streams import DomainBank
+
+VOCAB = 64
+WINDOWS = 6
+MICRO_PER_WINDOW = 2        # group budget / window (indep: 2/3 each)
+
+
+def _req(sid, toks):
+    return Request(stream_id=sid, t=0.0, loc=(0, 0), subsamples=toks,
+                   acc=0.0, train_data=toks)
+
+
+def _run_setting(engine, bank, domains, rng):
+    """domains: per-stream domain id per window (list of 3 callables)."""
+    evals = [bank.sample(domains[i](WINDOWS - 1), rng, 16, 32)
+             for i in range(3)]
+
+    def inflow(i, w):
+        return bank.sample(domains[i](w), rng, 4, 32)
+
+    # group retraining
+    gjob = RetrainJob(engine, _req("s0", inflow(0, 0)), micro_steps=4,
+                      batch=16, seed=0)
+    gjob.add_member(_req("s1", inflow(1, 0)))
+    gjob.add_member(_req("s2", inflow(2, 0)))
+    for w in range(WINDOWS):
+        for i in range(3):
+            gjob.ingest(inflow(i, w))
+        for _ in range(MICRO_PER_WINDOW):
+            gjob.train_micro()
+    group = float(np.mean([engine.accuracy(gjob.state["params"], ev)
+                           for ev in evals]))
+
+    # independent retraining: 3 jobs, each 1/3 of the micro budget
+    accs = []
+    total_micro = WINDOWS * MICRO_PER_WINDOW
+    per_job = total_micro // 3
+    for i in range(3):
+        job = RetrainJob(engine, _req(f"s{i}", inflow(i, 0)),
+                         micro_steps=4, batch=16, seed=0)
+        done = 0
+        for w in range(WINDOWS):
+            job.ingest(inflow(i, w))
+            if done < per_job and w % (WINDOWS // max(1, per_job)) == 0:
+                job.train_micro()
+                done += 1
+        accs.append(engine.accuracy(job.state["params"], evals[i]))
+    indep = float(np.mean(accs))
+    return group, indep
+
+
+def run():
+    rows = Rows("similarity")
+    engine = make_engine()
+    bank = DomainBank(VOCAB, 6, dim=4, seed=0)
+    rng = np.random.default_rng(0)
+
+    settings = {
+        # high: everyone on domain 0
+        "high": [lambda w: 0, lambda w: 0, lambda w: 0],
+        # medium: stream 2 alternates into domain 1
+        "medium": [lambda w: 0, lambda w: 0,
+                   lambda w: 0 if w % 2 == 0 else 1],
+        # low: disjoint domains
+        "low": [lambda w: 0, lambda w: 2, lambda w: 4],
+    }
+    deltas = {}
+    for name, doms in settings.items():
+        group, indep = _run_setting(engine, bank, doms, rng)
+        rows.add(f"{name}_group_acc", group)
+        rows.add(f"{name}_indep_acc", indep)
+        rows.add(f"{name}_group_advantage", group - indep)
+        deltas[name] = group - indep
+    # paper claims (Fig. 8): group retraining wins under correlated
+    # drift and the advantage vanishes/reverses for unrelated streams
+    rows.add("group_wins_at_high_similarity", int(deltas["high"] > 0.02))
+    rows.add("advantage_collapses_at_low_similarity",
+             int(deltas["low"] < deltas["high"] - 0.05))
+    return rows.emit()
+
+
+if __name__ == "__main__":
+    run()

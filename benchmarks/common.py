@@ -1,0 +1,75 @@
+"""Shared benchmark harness: fleet construction, controller runs, and
+CSV row collection. Scales are reduced (CPU container) but the
+*comparisons* mirror the paper's figures 1:1 — same frameworks, same
+metrics (mAP-analogue accuracy, response time), same resource axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.baselines import (EkyaController, NaiveController,
+                                  RECLController)
+from repro.core.controller import ControllerConfig, ECCOController
+from repro.core.trainer import SharedEngine
+from repro.data.streams import make_fleet
+
+VOCAB = 64
+
+FRAMEWORKS = {
+    "ecco": ECCOController,
+    "naive": NaiveController,
+    "ekya": EkyaController,
+    "recl": RECLController,
+}
+
+
+def make_engine(arch: str = "olmo-1b", vocab: int = VOCAB) -> SharedEngine:
+    cfg = dataclasses.replace(smoke_config(arch), vocab_size=vocab)
+    return SharedEngine(cfg)
+
+
+def run_framework(framework: str, engine: SharedEngine, streams,
+                  *, windows: int = 8, window_micro: int = 8,
+                  shared_bandwidth: float = 1e9,
+                  local_caps: Optional[dict] = None,
+                  micro_steps: int = 4, train_batch: int = 16,
+                  sample_rate: int = 8, p_drop: float = 0.5,
+                  seed: int = 0):
+    """Run one framework over a fleet; returns the controller."""
+    cc = ControllerConfig(window_micro=window_micro,
+                          shared_bandwidth=shared_bandwidth,
+                          local_caps=local_caps,
+                          micro_steps=micro_steps,
+                          train_batch=train_batch,
+                          sample_rate=sample_rate,
+                          p_drop=p_drop)
+    ctl = FRAMEWORKS[framework](engine, streams, cc, seed=seed)
+    ctl.warmup()
+    for _ in range(windows):
+        ctl.run_window()
+    return ctl
+
+
+class Rows:
+    """CSV row collector: benchmark,metric,value."""
+
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.rows: List[str] = []
+        self.t0 = time.time()
+
+    def add(self, metric: str, value):
+        if isinstance(value, float):
+            value = f"{value:.4f}"
+        self.rows.append(f"{self.bench},{metric},{value}")
+
+    def emit(self) -> List[str]:
+        self.add("wall_seconds", time.time() - self.t0)
+        for r in self.rows:
+            print(r, flush=True)
+        return self.rows

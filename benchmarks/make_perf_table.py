@@ -1,0 +1,39 @@
+"""Generate the EXPERIMENTS.md §Perf optimized-vs-baseline table from
+dryrun_baseline.json + dryrun_optimized.json."""
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return {(r["arch"], r["shape"], r["mesh"]): r
+                for r in json.load(f) if r["status"] == "ok"}
+
+
+def main():
+    base = load("dryrun_baseline.json")
+    opt = load("dryrun_optimized.json")
+    rows = []
+    print("| arch | shape | mesh | frac (tp) | frac (zero) | Δ | new dominant |")
+    print("|---|---|---|---|---|---|---|")
+    gains = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        fb, fo = b["roofline_fraction"], o["roofline_fraction"]
+        if b["shape"] in ("decode_32k", "long_500k"):
+            continue      # decode cells use tp in both profiles
+        d = (fo / fb) if fb > 0 else float("inf")
+        gains.append(d)
+        print(f"| {key[0]} | {key[1]} | {key[2]} | {fb:.4f} | {fo:.4f} "
+              f"| {d:.2f}x | {o['dominant'].replace('_s','')} |")
+    gains.sort()
+    n = len(gains)
+    print(f"\ngeometric-ish summary: median gain "
+          f"{gains[n // 2]:.2f}x over {n} train/prefill cells; "
+          f"min {gains[0]:.2f}x, max {gains[-1]:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only similarity,...]
+
+Prints ``benchmark,metric,value`` CSV rows. Mapping to the paper:
+    similarity      — Fig. 2c / Fig. 8 (group vs independent, similarity)
+    end_to_end      — Fig. 6 (accuracy vs GPU / bandwidth budgets)
+    scalability     — Fig. 7 (accuracy + response time vs #streams)
+    grouping        — Fig. 9 (dynamic regrouping trace)
+    allocator       — Fig. 10 (ECCO vs RECL allocator fairness)
+    transmission    — Fig. 11 + Table 1 (controller ablation)
+    responsiveness  — Fig. 12 / 13 (model reuse, data aggregation)
+    kernels         — substrate microbench + interpret spot checks
+    roofline        — §Roofline table from the dry-run artifact
+    faults          — checkpoint/restore + straggler mitigation drill
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+BENCHES = [
+    "kernels",
+    "roofline",
+    "faults",
+    "similarity",
+    "allocator",
+    "grouping",
+    "transmission",
+    "responsiveness",
+    "scalability",
+    "end_to_end",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+    names = (args.only.split(",") if args.only else BENCHES)
+
+    print("benchmark,metric,value")
+    failures = []
+    t0 = time.time()
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.bench_{name}")
+        try:
+            mod.run()
+        except Exception as e:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"{name},ERROR,{type(e).__name__}")
+    print(f"total,wall_seconds,{time.time() - t0:.1f}")
+    if failures:
+        print(f"total,failed_benchmarks,{';'.join(failures)}")
+        sys.exit(1)
+    print(f"total,benchmarks_passed,{len(names)}")
+
+
+if __name__ == "__main__":
+    main()

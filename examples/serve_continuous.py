@@ -1,0 +1,80 @@
+"""Continuous serving example: retrain-then-serve.
+
+A group model is retrained on a drifted stream, then serves batched
+generation requests through the slot-pool KV cache (repro.serve.kvcache)
+— the "updated model back to the devices" half of the ECCO loop, plus
+server-side shadow serving.
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.grouping import Request
+from repro.core.trainer import RetrainJob, SharedEngine
+from repro.data.streams import DomainBank
+from repro.serve.kvcache import ServeLoop
+
+
+def main():
+    vocab = 64
+    cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=vocab)
+    engine = SharedEngine(cfg)
+    bank = DomainBank(vocab, 4, dim=4, seed=0)
+    rng = np.random.default_rng(0)
+
+    # 1. retrain a group model on the drifted domain
+    dom = 1
+    toks = bank.sample(dom, rng, 8, 32)
+    job = RetrainJob(engine, Request("cam0", 0.0, (0, 0), toks, 0.0,
+                                     train_data=toks),
+                     micro_steps=4, batch=16, seed=0)
+    print("retraining group model on drifted domain...")
+    for w in range(8):
+        job.ingest(bank.sample(dom, rng, 8, 32))
+        job.train_micro()
+    acc = engine.accuracy(job.state["params"],
+                          bank.sample(dom, rng, 16, 32))
+    print(f"retrained accuracy: {acc:.3f}")
+
+    # 2. serve batched requests with the retrained model
+    loop = ServeLoop(engine.model, job.state["params"], num_slots=4,
+                     capacity=64, max_new=12)
+    prompts = {f"req{i}": bank.sample(dom, rng, 1, 16)[0]
+               for i in range(8)}
+    pending = list(prompts.items())
+    t0 = time.time()
+    ticks = 0
+    while pending or loop.mgr.active():
+        while pending and loop.mgr.free_slots():
+            rid, prompt = pending.pop(0)
+            loop.submit(rid, prompt)
+        loop.tick()
+        ticks += 1
+    dt = time.time() - t0
+    total = sum(len(v) for v in loop.outputs.values())
+    print(f"served {len(loop.outputs)} requests / {total} tokens in "
+          f"{dt:.2f}s ({total / dt:.0f} tok/s, {ticks} ticks, "
+          f"4-slot pool)")
+
+    # 3. sanity: generated continuations follow the drifted bigram
+    hit = n = 0
+    for rid, out in loop.outputs.items():
+        prev = int(prompts[rid][-1])
+        for t in out:
+            hit += bank.P[dom][prev].argmax() == t
+            prev = int(t)
+            n += 1
+    print(f"generated tokens matching the domain's argmax transition: "
+          f"{hit / n:.2f} (drifted-domain fidelity)")
+
+
+if __name__ == "__main__":
+    main()

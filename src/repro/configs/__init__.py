@@ -1,0 +1,53 @@
+"""Architecture registry: `get_config(arch)`, `smoke_config(arch)`, SHAPES.
+
+Each assigned architecture lives in its own module with the exact published
+dimensions; `smoke_config()` returns a reduced same-family variant used by
+CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    DENSE, ENCODER, HYBRID, MOE, SSM, VLM,
+    MeshConfig, ModelConfig, MoEConfig, SSMConfig, ShapeConfig,
+    TrainConfig, SHAPES,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "olmo-1b": "repro.configs.olmo_1b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch]).smoke_config()
+
+
+def cell_is_runnable(cfg: ModelConfig, shape_name: str) -> str:
+    """Return 'ok' or a skip reason for an (arch, shape) cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and not cfg.has_decode:
+        return "skip: encoder-only arch has no decode step"
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return "skip: full-attention arch; 524k decode needs sub-quadratic attention"
+    return "ok"

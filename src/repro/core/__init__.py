@@ -1,0 +1,13 @@
+"""ECCO's contribution: group retraining for continuous learning.
+
+allocator.py — Alg. 1 micro-window GPU allocation (objective-gain greedy
+    with the size-tempered average + max-min fairness bonus).
+grouping.py — Alg. 2 dynamic grouping (metadata prefilter + accuracy
+    check; periodic eviction with EMA-smoothed reference).
+gaimd.py — fluid-model GAIMD congestion control (rate ∝ α/(1−β)).
+transmission.py — sampling-config tables + GPU-proportional bandwidth.
+drift.py — JS-divergence drift detection over token histograms.
+trainer.py — group retraining jobs over one shared compiled engine.
+controller.py — the end-to-end window loop (Fig. 3/4).
+baselines.py — Naive / Ekya / RECL on the same substrate.
+"""

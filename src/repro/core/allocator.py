@@ -1,0 +1,138 @@
+"""ECCO GPU (accelerator) allocation for group retraining — Algorithm 1.
+
+The allocator time-shares the accelerator across retraining jobs in
+micro-windows. Each micro-window is greedily granted to the job with the
+highest *objective gain* under the paper's objective (Eq. 1):
+
+    max  alpha * sum_j n_j^beta A_j(g_j) / sum_j n_j^beta  +  min_j A_j(g_j)
+
+The fairness term gives the lowest-accuracy job a bonus equal to its raw
+accuracy gain, preventing starvation of small groups (paper §3.1).
+
+Jobs are duck-typed: they expose
+    .num_members          -> int (n_j)
+    .eval()               -> float accuracy in [0, 1]
+    .train_micro()        -> None (train for one micro-window)
+
+`RECLAllocator` reproduces the baseline allocator ECCO compares against
+(objective = total accuracy improvement, i.e. size-weighted, no fairness
+term) — used by benchmarks/bench_allocator.py (paper Fig. 10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class AllocationTrace:
+    """Per-micro-window record of who ran and the measured accuracies."""
+    order: List[str]                      # job id per micro-window
+    acc: Dict[str, List[float]]           # accuracy trajectory per job
+    shares: Dict[str, float]              # estimated GPU share p_j
+    gpu_time: Dict[str, int]              # micro-windows consumed per job
+
+
+class ECCOAllocator:
+    def __init__(self, alpha: float = 1.0, beta: float = 0.5):
+        self.alpha = alpha
+        self.beta = beta
+
+    # -- objective gain (Alg. 1, CalObjectiveGain) --------------------------
+    def _objective_gains(self, jobs, acc, acc_gain):
+        nbeta = {j.job_id: j.num_members ** self.beta for j in jobs}
+        denom = sum(nbeta.values()) or 1.0
+        # jobs that never got a micro-window (budget < |J|) have no
+        # measured gain yet; treat as 0 rather than KeyError
+        gains = {j.job_id: self.alpha * nbeta[j.job_id] / denom
+                 * acc_gain.get(j.job_id, 0.0) for j in jobs}
+        if acc:
+            worst = min(acc, key=acc.get)
+            gains[worst] = gains.get(worst, 0.0) + acc_gain.get(worst, 0.0)
+        return gains
+
+    # -- Alg. 1 main loop ----------------------------------------------------
+    def run_window(self, jobs: Sequence, window_micro: int) -> AllocationTrace:
+        """Run one retraining window of `window_micro` micro-windows."""
+        jobs = list(jobs)
+        budget = window_micro
+        acc: Dict[str, float] = {}
+        acc_gain: Dict[str, float] = {}
+        order: List[str] = []
+        traj: Dict[str, List[float]] = {j.job_id: [] for j in jobs}
+        used: Dict[str, int] = {j.job_id: 0 for j in jobs}
+
+        def micro_retraining(j):
+            nonlocal budget
+            a_i = j.eval()
+            j.train_micro()
+            a_f = j.eval()
+            budget -= 1
+            acc[j.job_id] = a_f
+            acc_gain[j.job_id] = a_f - a_i
+            order.append(j.job_id)
+            traj[j.job_id].append(a_f)
+            used[j.job_id] += 1
+
+        # initial training pass
+        for j in jobs:
+            if budget <= 0:
+                break
+            micro_retraining(j)
+        gains = self._objective_gains(jobs, acc, acc_gain)
+
+        # GPU-share estimate for the transmission controller (§3.2)
+        pos = {k: max(v, 0.0) for k, v in gains.items()}
+        tot = sum(pos.values())
+        if tot <= 0:
+            shares = {j.job_id: 1.0 / len(jobs) for j in jobs}
+        else:
+            shares = {k: v / tot for k, v in pos.items()}
+
+        by_id = {j.job_id: j for j in jobs}
+        while budget > 0:
+            jid = max(gains, key=gains.get)
+            micro_retraining(by_id[jid])
+            gains = self._objective_gains(jobs, acc, acc_gain)
+
+        return AllocationTrace(order=order, acc=traj, shares=shares,
+                               gpu_time=used)
+
+    def estimate_shares(self, jobs, gains=None) -> Dict[str, float]:
+        """p_j from the latest objective gains (Line 15 of Alg. 1)."""
+        if gains is None:
+            gains = {j.job_id: 1.0 for j in jobs}
+        pos = {k: max(v, 0.0) for k, v in gains.items()}
+        tot = sum(pos.values()) or 1.0
+        return {k: v / tot for k, v in pos.items()}
+
+
+class RECLAllocator(ECCOAllocator):
+    """Baseline allocator (RECL/Ekya-style): maximize total accuracy
+    improvement; groups weighted by member count, no fairness term."""
+
+    def _objective_gains(self, jobs, acc, acc_gain):
+        return {j.job_id: j.num_members * acc_gain.get(j.job_id, 0.0)
+                for j in jobs}
+
+
+class UniformAllocator(ECCOAllocator):
+    """Naive baseline: round-robin micro-windows, no measurement-driven
+    choices."""
+
+    def run_window(self, jobs: Sequence, window_micro: int) -> AllocationTrace:
+        jobs = list(jobs)
+        order, traj, used = [], {j.job_id: [] for j in jobs}, \
+            {j.job_id: 0 for j in jobs}
+        acc = {}
+        for i in range(window_micro):
+            j = jobs[i % len(jobs)]
+            j.train_micro()
+            a = j.eval()
+            acc[j.job_id] = a
+            order.append(j.job_id)
+            traj[j.job_id].append(a)
+            used[j.job_id] += 1
+        shares = {j.job_id: 1.0 / len(jobs) for j in jobs}
+        return AllocationTrace(order=order, acc=traj, shares=shares,
+                               gpu_time=used)

@@ -1,0 +1,187 @@
+"""ECCO end-to-end controller: drift detection -> dynamic grouping ->
+GPU allocation -> transmission control -> group retraining, window by
+window (Fig. 3 / Fig. 4 of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.allocator import ECCOAllocator, AllocationTrace
+from repro.core.drift import DriftDetector
+from repro.core.gaimd import ecco_params, steady_state_rates
+from repro.core.grouping import Grouper, Request
+from repro.core.trainer import RetrainJob, SharedEngine
+from repro.data.streams import Stream
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    window_micro: int = 8            # W micro-windows per retraining window
+    window_seconds: float = 10.0
+    seq_len: int = 32
+    sample_rate: int = 8             # sequences per stream per window (f)
+    eval_batch: int = 16
+    eps_t: float = 60.0
+    delta_loc: float = 100.0
+    p_drop: float = 0.15
+    drift_threshold: float = 0.25
+    shared_bandwidth: float = 64.0   # tokens/sec equivalents
+    local_caps: Optional[Dict[str, float]] = None
+    bytes_per_token: float = 1.0
+    micro_steps: int = 4
+    train_batch: int = 8
+
+
+@dataclasses.dataclass
+class WindowMetrics:
+    t: float
+    per_stream_acc: Dict[str, float]
+    groups: Dict[str, List[str]]
+    shares: Dict[str, float]
+    bandwidth: Dict[str, float]
+
+
+class ECCOController:
+    def __init__(self, engine: SharedEngine, streams: Sequence[Stream],
+                 cc: Optional[ControllerConfig] = None, *, seed: int = 0):
+        self.engine = engine
+        self.streams = list(streams)
+        self.cc = cc or ControllerConfig()
+        self.allocator = ECCOAllocator()
+        self.grouper = Grouper(eps_t=self.cc.eps_t,
+                               delta_loc=self.cc.delta_loc,
+                               p_drop=self.cc.p_drop,
+                               new_job_fn=self._new_job)
+        self.jobs: List[RetrainJob] = []
+        self.detectors = {s.stream_id: DriftDetector(
+            threshold=self.cc.drift_threshold, vocab=engine.cfg.vocab_size)
+            for s in self.streams}
+        self.rng = np.random.default_rng(seed)
+        self.t = 0.0
+        self.history: List[WindowMetrics] = []
+        self.request_time: Dict[str, float] = {}
+        self._seed = seed
+
+    # ------------------------------------------------------------------
+    def _new_job(self, req: Request) -> RetrainJob:
+        return RetrainJob(self.engine, req, micro_steps=self.cc.micro_steps,
+                          batch=self.cc.train_batch, seed=self._seed)
+
+    def _stream_job(self, stream_id: str) -> Optional[RetrainJob]:
+        for j in self.jobs:
+            if any(m.stream_id == stream_id for m in j.members):
+                return j
+        return None
+
+    def warmup(self):
+        """Set drift references from time-0 data."""
+        for s in self.streams:
+            toks = s.sample(0.0, self.cc.sample_rate, self.cc.seq_len)
+            self.detectors[s.stream_id].set_reference(toks)
+
+    # ------------------------------------------------------------------
+    def run_window(self) -> WindowMetrics:
+        cc = self.cc
+        t = self.t
+
+        # 1. live data + drift detection -> retraining requests
+        window_data: Dict[str, np.ndarray] = {}
+        for s in self.streams:
+            toks = s.sample(t, cc.sample_rate, cc.seq_len)
+            window_data[s.stream_id] = toks
+            if self._stream_job(s.stream_id) is None:
+                if self.detectors[s.stream_id].observe(toks):
+                    sub = s.sample(t, cc.eval_batch, cc.seq_len)
+                    acc_now = 0.0
+                    req = Request(stream_id=s.stream_id, t=t, loc=s.loc,
+                                  subsamples=sub, acc=acc_now,
+                                  train_data=toks)
+                    self.request_time.setdefault(s.stream_id, t)
+                    self.grouper.group_request(self.jobs, req)
+
+        # 2. GPU shares estimate -> transmission control (GAIMD)
+        shares: Dict[str, float] = {}
+        bw: Dict[str, float] = {}
+        if self.jobs:
+            p = self.allocator.estimate_shares(self.jobs)
+            flows, fshare, fn, caps = [], [], [], []
+            for j in self.jobs:
+                for m in j.members:
+                    flows.append(m.stream_id)
+                    fshare.append(p[j.job_id])
+                    fn.append(j.num_members)
+                    lc = (cc.local_caps or {}).get(m.stream_id, np.inf)
+                    caps.append(lc)
+            rates = steady_state_rates(
+                *ecco_params(fshare, fn), np.asarray(caps, np.float32),
+                cc.shared_bandwidth)
+            bw = dict(zip(flows, map(float, rates)))
+            shares = p
+            # 3. members deliver data volume matched to bandwidth
+            for j in self.jobs:
+                for m in j.members:
+                    toks = window_data.get(m.stream_id)
+                    if toks is None:
+                        continue
+                    deliverable = int(bw[m.stream_id] * cc.window_seconds
+                                      / cc.bytes_per_token / cc.seq_len)
+                    n_seq = max(1, min(toks.shape[0] // max(1, j.num_members),
+                                       deliverable))
+                    j.ingest(toks[:n_seq])
+
+            # 4. allocator runs the retraining window (Alg. 1)
+            self.allocator.run_window(self.jobs, cc.window_micro)
+
+            # 5. periodic regrouping (Alg. 2 UpdateGrouping) — evaluated
+            # on each member's RECENT window data (the paper's
+            # subsamples come from live transmissions), so a member that
+            # diverged this window is judged on its new distribution
+            for j in self.jobs:
+                for m in j.members:
+                    if m.stream_id in window_data:
+                        m.subsamples = window_data[m.stream_id]
+            self.grouper.update_grouping(self.jobs, t)
+
+        # metrics
+        acc = {}
+        for s in self.streams:
+            j = self._stream_job(s.stream_id)
+            ev = s.sample(t + 0.5, cc.eval_batch, cc.seq_len)
+            if j is not None:
+                acc[s.stream_id] = self.engine.accuracy(j.state["params"], ev)
+            else:
+                acc[s.stream_id] = float("nan")
+        groups = {j.job_id: [m.stream_id for m in j.members]
+                  for j in self.jobs}
+        wm = WindowMetrics(t=t, per_stream_acc=acc, groups=groups,
+                           shares=shares, bandwidth=bw)
+        self.history.append(wm)
+        self.t += cc.window_seconds
+        return wm
+
+    def run(self, windows: int) -> List[WindowMetrics]:
+        self.warmup()
+        for _ in range(windows):
+            self.run_window()
+        return self.history
+
+    # -- reporting -------------------------------------------------------------
+    def mean_accuracy(self, last_k: int = 1) -> float:
+        vals = []
+        for wm in self.history[-last_k:]:
+            vals += [v for v in wm.per_stream_acc.values()
+                     if not np.isnan(v)]
+        return float(np.mean(vals)) if vals else float("nan")
+
+    def response_times(self, threshold: float) -> Dict[str, float]:
+        """Windows from request to reaching `threshold` accuracy."""
+        out = {}
+        for sid, t0 in self.request_time.items():
+            for wm in self.history:
+                if wm.t >= t0 and wm.per_stream_acc.get(sid, 0.0) >= threshold:
+                    out[sid] = wm.t - t0
+                    break
+        return out

@@ -1,0 +1,61 @@
+"""Data-drift signatures and detection.
+
+A stream's observable signature is its recent token histogram (over
+hashed vocab buckets). Drift score = Jensen-Shannon divergence between
+the live window histogram and the reference (deployment-time) histogram.
+A request fires when the score crosses `threshold` (the paper cites
+[4, 21, 40] for the trigger; any detector plugs in here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+def token_histogram(tokens, buckets: int = 64, vocab: Optional[int] = None
+                    ) -> np.ndarray:
+    t = np.asarray(tokens).reshape(-1)
+    if vocab:
+        idx = (t * buckets) // vocab
+    else:
+        idx = t % buckets
+    h = np.bincount(idx.astype(np.int64), minlength=buckets).astype(np.float64)
+    s = h.sum()
+    return h / s if s else h
+
+
+def js_divergence(p: np.ndarray, q: np.ndarray, eps: float = 1e-12) -> float:
+    p = p + eps
+    q = q + eps
+    p = p / p.sum()
+    q = q / q.sum()
+    m = 0.5 * (p + q)
+    kl = lambda a, b: float(np.sum(a * np.log(a / b)))
+    return 0.5 * kl(p, m) + 0.5 * kl(q, m)
+
+
+@dataclasses.dataclass
+class DriftDetector:
+    threshold: float = 0.25
+    buckets: int = 64
+    vocab: Optional[int] = None
+    reference: Optional[np.ndarray] = None
+    last_score: float = 0.0
+
+    def set_reference(self, tokens):
+        self.reference = token_histogram(tokens, self.buckets, self.vocab)
+
+    def observe(self, tokens) -> bool:
+        """Returns True if drift detected on this window of tokens."""
+        h = token_histogram(tokens, self.buckets, self.vocab)
+        if self.reference is None:
+            self.reference = h
+            return False
+        self.last_score = js_divergence(h, self.reference)
+        return self.last_score > self.threshold
+
+    def rebase(self, tokens):
+        """After retraining completes, the new data becomes the reference."""
+        self.set_reference(tokens)

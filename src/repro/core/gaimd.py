@@ -1,0 +1,78 @@
+"""Fluid-model GAIMD congestion control (paper §3.2.2).
+
+Each flow i runs Generalized AIMD with additive increase alpha_i (rate
+units per RTT) and multiplicative decrease beta_i. All flows traverse a
+shared bottleneck of capacity C; flow i additionally has a local uplink
+cap L_i. On bottleneck saturation every flow multiplicatively decreases
+(synchronized-loss fluid model). Steady-state rate is proportional to
+alpha_i / (1 - beta_i)  [Yang & Lam 2000, Eq. 21], which ECCO exploits by
+setting alpha_i = p_j / n_j, beta_i = 0.5 so bandwidth approximates
+GPU-share-proportional allocation.
+
+Implemented as a vectorized `jax.lax.scan` over RTT steps so thousands of
+flows simulate in microseconds; this simulator drives the data-pipeline
+rate limiter (the NS-3/tc substitute).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def simulate(alpha, beta, local_cap, shared_cap, *, steps: int = 2000,
+             r0: Optional[jnp.ndarray] = None):
+    """Simulate GAIMD flows.
+
+    alpha: (N,) additive increase per RTT
+    beta:  (N,) multiplicative decrease in (0, 1)
+    local_cap: (N,) per-flow uplink caps (inf for none)
+    shared_cap: scalar shared bottleneck capacity
+    Returns (rates (steps, N), final_rates (N,)).
+    """
+    alpha = jnp.asarray(alpha, jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32)
+    local_cap = jnp.asarray(local_cap, jnp.float32)
+    n = alpha.shape[0]
+    r = jnp.zeros((n,), jnp.float32) if r0 is None else jnp.asarray(r0)
+
+    def step(r, _):
+        r = jnp.minimum(r + alpha, local_cap)
+        overload = jnp.sum(r) > shared_cap
+        r = jnp.where(overload, r * beta, r)
+        return r, r
+
+    _, rates = jax.lax.scan(step, r, None, length=steps)
+    return rates, rates[-1]
+
+
+def steady_state_rates(alpha, beta, local_cap, shared_cap, *,
+                       steps: int = 4000, tail: int = 1000):
+    """Time-averaged steady-state rate per flow (tail average)."""
+    rates, _ = simulate(alpha, beta, local_cap, shared_cap, steps=steps)
+    return np.asarray(jnp.mean(rates[-tail:], axis=0))
+
+
+def ecco_params(p_shares, n_members, *, beta: float = 0.5,
+                alpha_scale: float = 1.0):
+    """Per-camera GAIMD parameters from GPU shares (paper: alpha = p_j/n_j,
+    beta = 0.5). p_shares/n_members: per-flow arrays (a camera inherits its
+    group's share p_j and group size n_j)."""
+    p = np.asarray(p_shares, np.float32)
+    n = np.asarray(n_members, np.float32)
+    alpha = alpha_scale * p / np.maximum(n, 1.0)
+    return alpha, np.full_like(alpha, beta)
+
+
+def proportionality_error(rates, targets) -> float:
+    """How far realized rates are from the GPU-proportional target
+    (normalized L1). Used by tests and bench_transmission."""
+    r = np.asarray(rates, np.float64)
+    t = np.asarray(targets, np.float64)
+    r = r / (r.sum() or 1.0)
+    t = t / (t.sum() or 1.0)
+    return float(np.abs(r - t).sum() / 2.0)

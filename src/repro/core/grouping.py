@@ -1,0 +1,118 @@
+"""ECCO dynamic camera/stream grouping — Algorithm 2.
+
+Two stages:
+  * GroupRequest: a new retraining request joins an existing job iff
+    (i) metadata pre-filter passes for EVERY member (request time within
+    eps, location within delta), and (ii) the job model's accuracy on the
+    request's subsamples beats the request's own current accuracy. Among
+    candidates, the best-scoring job wins; otherwise a new job is created.
+  * UpdateGrouping: at every retraining-window end, each member whose
+    accuracy dropped more than fraction `p` relative to the previous
+    window is evicted and re-enters GroupRequest as a fresh request.
+
+Jobs are duck-typed: .eval_on(samples) -> float, .add_member(req),
+.remove_member(stream_id), .members -> list[Request].
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class Request:
+    stream_id: str
+    t: float                      # drift-detection time
+    loc: Sequence[float]          # (x, y) location / trajectory centroid
+    subsamples: Any               # eval data for the performance check
+    acc: float                    # current (drifted) model accuracy
+    model: Any = None             # the device's current model (job seed)
+    train_data: Any = None        # sampled frames to contribute
+    # bookkeeping for periodic reevaluation
+    acc_prev: Optional[float] = None
+    last_job: Optional[str] = None   # job that just evicted this member
+
+
+def _dist(a, b) -> float:
+    return math.sqrt(sum((float(x) - float(y)) ** 2 for x, y in zip(a, b)))
+
+
+class Grouper:
+    def __init__(self, *, eps_t: float = 60.0, delta_loc: float = 100.0,
+                 p_drop: float = 0.1,
+                 new_job_fn: Callable[[Request], Any] = None):
+        self.eps_t = eps_t
+        self.delta_loc = delta_loc
+        self.p_drop = p_drop
+        self.new_job_fn = new_job_fn
+        self.events: List[dict] = []     # grouping decisions (for Fig. 9)
+
+    # -- Alg. 2 GroupRequest -------------------------------------------------
+    def group_request(self, jobs: List, req: Request):
+        candidates: Dict[int, float] = {}
+        for idx, job in enumerate(jobs):
+            if not job.members:
+                continue
+            # a member evicted for diverging must not rejoin the same
+            # job this round (its model trivially scores >= the member's
+            # own accuracy — it IS the member's model); the paper
+            # initiates a separate retraining job for it
+            if req.last_job is not None and job.job_id == req.last_job:
+                continue
+            correlated = all(
+                abs(r.t - req.t) <= self.eps_t
+                and _dist(r.loc, req.loc) <= self.delta_loc
+                for r in job.members)
+            if not correlated:
+                continue
+            acc_j = job.eval_on(req.subsamples)
+            if acc_j >= req.acc:                 # performance check
+                candidates[idx] = acc_j
+        if candidates:
+            best = max(candidates, key=candidates.get)
+            jobs[best].add_member(req)
+            self.events.append({"kind": "join", "stream": req.stream_id,
+                                "job": jobs[best].job_id, "t": req.t,
+                                "acc_gain": candidates[best] - req.acc})
+            return jobs[best]
+        job = self.new_job_fn(req)
+        jobs.append(job)
+        self.events.append({"kind": "new", "stream": req.stream_id,
+                            "job": job.job_id, "t": req.t})
+        return job
+
+    # -- Alg. 2 UpdateGrouping ------------------------------------------------
+    def update_grouping(self, jobs: List, now: float):
+        """Window-end reevaluation. Returns list of re-queued requests.
+
+        The reference accuracy is an EMA over windows rather than the
+        raw previous value: young models oscillate window-to-window and
+        a raw comparison evicts on training noise, while a true second
+        drift collapses accuracy far below any smoothed reference.
+        """
+        requeued: List[Request] = []
+        for job in list(jobs):
+            for r in list(job.members):
+                acc_n = job.eval_on(r.subsamples)
+                if r.acc_prev is not None and r.acc_prev > 0:
+                    rel = (acc_n - r.acc_prev) / r.acc_prev
+                    if rel < -self.p_drop:       # second drift detected
+                        job.remove_member(r.stream_id)
+                        r.t = now
+                        r.acc = acc_n
+                        r.acc_prev = None
+                        r.last_job = job.job_id
+                        requeued.append(r)
+                        self.events.append({"kind": "evict",
+                                            "stream": r.stream_id,
+                                            "job": job.job_id, "t": now})
+                        continue
+                    r.acc_prev = 0.5 * r.acc_prev + 0.5 * acc_n
+                else:
+                    r.acc_prev = acc_n
+        # drop empty jobs, then re-group evicted members
+        jobs[:] = [j for j in jobs if j.members]
+        for r in requeued:
+            self.group_request(jobs, r)
+        return requeued

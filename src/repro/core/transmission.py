@@ -1,0 +1,123 @@
+"""Resource-aware transmission control (paper §3.2).
+
+The camera-side controller:
+  1. Picks a *sampling configuration* (rate f, resolution q) from an
+     offline-profiled table keyed by GPU-budget level; scales f by 1/n_j
+     inside a group so the group's aggregate data volume matches the
+     group's compute capacity.
+  2. Sets GAIMD parameters alpha = p_j / n_j, beta = 0.5 so the flow's
+     steady-state bandwidth approximates its GPU-proportional share.
+  3. "Compresses" (drops/quantizes tokens) so the selected configuration
+     fits inside the bandwidth actually achieved.
+
+In the LM mapping: f = sequences sampled per retraining window and
+q = tokens per sequence (context resolution). The pixels/sec budget of
+the paper becomes tokens/step the accelerator can consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import gaimd
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    rate: int          # sequences per window (paper: frame rate f)
+    resolution: int    # tokens per sequence  (paper: resolution q)
+
+    @property
+    def tokens(self) -> int:
+        return self.rate * self.resolution
+
+
+class ProfileTable:
+    """Offline-profiled accuracy for (budget_level, sampling config).
+
+    Built by benchmarks/bench_transmission.py by actually retraining a
+    reduced model under each configuration (the paper's Fig. 5 procedure);
+    here it stores and queries the results.
+    """
+
+    def __init__(self, configs: Sequence[SamplingConfig]):
+        self.configs = list(configs)
+        self._acc: Dict[Tuple[int, int], float] = {}
+
+    def record(self, budget_level: int, cfg_idx: int, acc: float):
+        self._acc[(budget_level, cfg_idx)] = acc
+
+    def best(self, budget_level: int, token_budget: Optional[int] = None
+             ) -> SamplingConfig:
+        """Best profiled config at this budget level whose token volume
+        fits `token_budget` (if given)."""
+        cands = []
+        for (lvl, idx), acc in self._acc.items():
+            if lvl != budget_level:
+                continue
+            c = self.configs[idx]
+            if token_budget is not None and c.tokens > token_budget:
+                continue
+            cands.append((acc, idx))
+        if not cands:
+            # fall back: the densest config that fits
+            fitting = [c for c in self.configs
+                       if token_budget is None or c.tokens <= token_budget]
+            return max(fitting or self.configs, key=lambda c: c.tokens)
+        return self.configs[max(cands)[1]]
+
+
+@dataclasses.dataclass
+class TransmissionDecision:
+    config: SamplingConfig
+    scaled_rate: float          # f* / n_j
+    gaimd_alpha: float
+    gaimd_beta: float
+    target_rate: float          # steady-state GAIMD rate (bandwidth units)
+    delivered_tokens: int       # after compression to achieved bandwidth
+
+
+class TransmissionController:
+    """One per camera/stream."""
+
+    def __init__(self, table: ProfileTable, *, bytes_per_token: float = 2.0):
+        self.table = table
+        self.bytes_per_token = bytes_per_token
+
+    def decide(self, *, gpu_budget_level: int, token_budget: int,
+               p_share: float, n_members: int,
+               achieved_bandwidth: float, window_seconds: float
+               ) -> TransmissionDecision:
+        cfg = self.table.best(gpu_budget_level, token_budget)
+        scaled_rate = cfg.rate / max(1, n_members)
+        alpha = p_share / max(1, n_members)
+        # tokens deliverable within the achieved bandwidth
+        deliverable = int(achieved_bandwidth * window_seconds
+                          / self.bytes_per_token)
+        want = int(scaled_rate * cfg.resolution)
+        delivered = min(want, deliverable)
+        return TransmissionDecision(
+            config=cfg, scaled_rate=scaled_rate, gaimd_alpha=alpha,
+            gaimd_beta=0.5, target_rate=achieved_bandwidth,
+            delivered_tokens=delivered)
+
+
+def allocate_bandwidth(p_shares: Sequence[float], n_members: Sequence[int],
+                       local_caps: Sequence[float], shared_cap: float,
+                       *, steps: int = 4000) -> np.ndarray:
+    """Realized per-flow bandwidth under ECCO's customized GAIMD."""
+    alpha, beta = gaimd.ecco_params(p_shares, n_members)
+    return gaimd.steady_state_rates(alpha, beta, np.asarray(local_caps),
+                                    shared_cap, steps=steps)
+
+
+def equal_share_bandwidth(n_flows: int, local_caps: Sequence[float],
+                          shared_cap: float, *, steps: int = 4000
+                          ) -> np.ndarray:
+    """Baseline: traditional AIMD (alpha=1, beta=0.5) equal competition."""
+    alpha = np.ones(n_flows, np.float32)
+    beta = np.full(n_flows, 0.5, np.float32)
+    return gaimd.steady_state_rates(alpha, beta, np.asarray(local_caps),
+                                    shared_cap, steps=steps)

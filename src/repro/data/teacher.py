@@ -1,0 +1,97 @@
+"""Teacher annotation — the server-side "high-accuracy model" that labels
+retraining frames (paper Fig. 1: YOLO11x annotating sampled frames).
+
+Two teachers are provided:
+  * OracleTeacher — the DomainBank's true next-token distribution
+    (a perfect teacher; isolates control-plane effects in benchmarks).
+  * ModelTeacher  — a larger same-family student (e.g. 2x depth/width)
+    producing soft logits via a jitted forward; this is what the paper's
+    setup maps to (teacher FLOPs >> student FLOPs, run server-side only
+    on *sampled* frames).
+
+Both return per-token soft label distributions that the train step
+consumes through `distill_weight` (repro.train.train_step.make_loss_fn).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+
+
+class OracleTeacher:
+    """Wraps a DomainBank; emits exact next-token distributions."""
+
+    def __init__(self, bank):
+        self.bank = bank
+
+    def annotate(self, domain: int, tokens: np.ndarray) -> np.ndarray:
+        """tokens (B,S) -> soft targets (B,S,V) (probability space)."""
+        return self.bank.soft_labels(domain, tokens)
+
+
+def scale_config(cfg: ModelConfig, *, depth_mult: float = 2.0,
+                 width_mult: float = 1.0) -> ModelConfig:
+    """A same-family, larger teacher config (the YOLO11n -> YOLO11x
+    analogue)."""
+    d_model = int(cfg.d_model * width_mult)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-teacher",
+        num_layers=max(1, int(cfg.num_layers * depth_mult)),
+        d_model=d_model,
+        d_ff=int(cfg.d_ff * width_mult) if cfg.d_ff else cfg.d_ff,
+        num_heads=max(1, int(cfg.num_heads * width_mult)),
+        num_kv_heads=max(1, int(cfg.num_kv_heads * width_mult)),
+    )
+
+
+class ModelTeacher:
+    """A larger same-family model annotating sampled sequences with
+    logits. Kept fp32 on the server; never shipped to devices."""
+
+    def __init__(self, student_cfg: ModelConfig, *, depth_mult: float = 2.0,
+                 width_mult: float = 1.0, seed: int = 0):
+        self.cfg = scale_config(student_cfg, depth_mult=depth_mult,
+                                width_mult=width_mult)
+        self.model = build_model(self.cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+
+        def fwd(params, toks):
+            logits, _ = self.model.apply(params, toks,
+                                         compute_dtype=jnp.float32)
+            return logits
+
+        self._fwd = jax.jit(fwd)
+
+    def annotate(self, tokens: np.ndarray) -> np.ndarray:
+        """tokens (B,S) -> teacher logits (B,S,V) as float32."""
+        return np.asarray(self._fwd(self.params, jnp.asarray(tokens)))
+
+    def fit(self, batches, *, steps: int = 50, lr: float = 3e-3,
+            tcfg=None):
+        """Optionally adapt the teacher itself on pooled fleet data (the
+        paper pre-trains teachers offline; exposed for examples)."""
+        from repro.configs.base import TrainConfig
+        from repro.train.train_step import init_state, make_train_step
+        tcfg = tcfg or TrainConfig(learning_rate=lr, warmup_steps=5,
+                                   total_steps=max(steps, 10), remat="none")
+        step = jax.jit(make_train_step(self.model, tcfg))
+        state = init_state(self.model, jax.random.PRNGKey(1), tcfg)
+        state = {"params": self.params, "opt": state["opt"]}
+        it = 0
+        while it < steps:
+            for b in batches:
+                state, _ = step(state, {k: jnp.asarray(v)
+                                        for k, v in b.items()})
+                it += 1
+                if it >= steps:
+                    break
+        self.params = state["params"]
+        return self

@@ -1,0 +1,139 @@
+"""Sharded, atomic, async checkpointing.
+
+Layout: one directory per step containing
+    manifest.json            — tree structure, shapes, dtypes, step meta
+    <leaf-index>.npy         — one array per leaf (host-local shard in a
+                               real multi-host deployment; full array on
+                               a single host)
+Writes go to  <dir>.tmp  and are atomically renamed, so a crash mid-write
+never corrupts the latest checkpoint; `latest_step()` only sees complete
+directories. `save_async` runs the serialization on a daemon thread —
+the returned handle joins in tests / at the next save.
+
+Restore supports *resharding*: arrays are loaded on host then placed with
+jax.device_put against the (possibly different) target shardings, which
+is what elastic re-meshing needs after losing a slice.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = None):
+    """Blocking sharded save with atomic rename."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "num_leaves": len(leaves),
+        "leaves": [],
+        "extra": extra or {},
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, f"{i}.npy"), arr)
+        manifest["leaves"].append({"shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)       # atomic publish
+    return final
+
+
+class AsyncCheckpointer:
+    """Serializes saves on a background thread; at most one in flight."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree, *, extra: Optional[dict] = None):
+        self.wait()
+        # device_get on the caller thread (arrays may be donated after)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            self.last_path = save(self.ckpt_dir, step, host_tree,
+                                  extra=extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        return self._thread
+
+    def _gc(self):
+        steps = list_steps(self.ckpt_dir)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(ckpt_dir, name,
+                                            "manifest.json")):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree, *,
+            shardings=None):
+    """Load a checkpoint into the structure of `target_tree`.
+
+    `shardings`: optional pytree of NamedSharding matching target_tree —
+    arrays are device_put against it (elastic resharding path). Without
+    it, arrays come back as host numpy in the tree structure.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(target_tree)
+    assert manifest["num_leaves"] == len(leaves), (
+        f"checkpoint has {manifest['num_leaves']} leaves, target "
+        f"{len(leaves)} — structure changed?")
+    loaded = [np.load(os.path.join(path, f"{i}.npy"))
+              for i in range(len(leaves))]
+    for got, want in zip(loaded, leaves):
+        assert tuple(got.shape) == tuple(np.shape(want)), (
+            got.shape, np.shape(want))
+    if shardings is not None:
+        shard_leaves = jax.tree.leaves(shardings)
+        loaded = [jax.device_put(a, s) for a, s in
+                  zip(loaded, shard_leaves)]
+    return jax.tree.unflatten(treedef, loaded), manifest["extra"]

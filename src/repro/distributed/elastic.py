@@ -1,0 +1,120 @@
+"""Elastic scaling: survive node/slice failure by re-meshing and
+resharding from the last checkpoint.
+
+The production mesh is (pod, data, model). A host failure takes out a
+row of the data axis (TPU slices fail as units). Recovery:
+
+  1. `shrink_mesh` — build the largest valid mesh from surviving devices
+     (data axis shrinks; model axis is preserved because TP shards are
+     intra-host on v5e topology).
+  2. re-derive sharding rules for the new mesh (same logical rules).
+  3. `restore` the last checkpoint against the new shardings
+     (repro.distributed.checkpoint resharding path).
+  4. re-lower the step functions (compiled cache keyed by mesh shape).
+
+The ECCO controller keeps running through this: jobs pause for the
+recovery window, then the allocator's measured AccGain/sec naturally
+re-prioritizes (no special-casing needed — the paper's own mechanism).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class MeshSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+
+def shrink_mesh(current: MeshSpec, failed_rows: int,
+                *, data_axis: str = "data") -> MeshSpec:
+    """New mesh spec after losing `failed_rows` rows of the data axis.
+    Keeps the model axis intact; drops whole data rows (slice-granular
+    failure). Raises if nothing survives."""
+    idx = current.axes.index(data_axis)
+    new_data = current.shape[idx] - failed_rows
+    if new_data < 1:
+        raise RuntimeError("no surviving data rows")
+    shape = list(current.shape)
+    shape[idx] = new_data
+    return MeshSpec(tuple(shape), current.axes)
+
+
+def build_mesh(spec: MeshSpec, *, devices=None):
+    """Materialize a mesh over the first prod(shape) (surviving)
+    devices."""
+    from jax.sharding import AxisType
+    n = int(np.prod(spec.shape))
+    devices = (jax.devices() if devices is None else list(devices))[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    dev_array = np.array(devices).reshape(spec.shape)
+    from jax.sharding import Mesh
+    return Mesh(dev_array, spec.axes,
+                axis_types=(AxisType.Auto,) * len(spec.axes))
+
+
+@dataclasses.dataclass
+class RecoveryPlan:
+    old_mesh_shape: Tuple[int, ...]
+    new_mesh_shape: Tuple[int, ...]
+    restore_step: Optional[int]
+    global_batch_scale: float      # DP width shrank -> scale batch or accum
+
+
+def plan_recovery(current: MeshSpec, failed_rows: int, ckpt_dir: str,
+                  *, data_axis: str = "data") -> RecoveryPlan:
+    from repro.distributed import checkpoint as ckpt
+    new = shrink_mesh(current, failed_rows, data_axis=data_axis)
+    i = current.axes.index(data_axis)
+    return RecoveryPlan(
+        old_mesh_shape=current.shape,
+        new_mesh_shape=new.shape,
+        restore_step=ckpt.latest_step(ckpt_dir),
+        global_batch_scale=new.shape[i] / current.shape[i],
+    )
+
+
+class ElasticRuntime:
+    """Owns the mesh + compiled step; `fail_and_recover` swaps both.
+
+    step_factory(mesh, rules) -> (step_fn, state_shardings) so the
+    runtime can re-lower after any re-mesh. State flows through the
+    checkpoint (restore with new shardings), which is the only
+    correctness-preserving path when shard boundaries move.
+    """
+
+    def __init__(self, mesh_spec: MeshSpec, step_factory: Callable,
+                 rules_fn: Callable, ckpt_dir: str):
+        self.spec = mesh_spec
+        self.step_factory = step_factory
+        self.rules_fn = rules_fn
+        self.ckpt_dir = ckpt_dir
+        self.mesh = build_mesh(mesh_spec)
+        self.rules = rules_fn(self.mesh)
+        self.step, self.state_shardings = step_factory(self.mesh,
+                                                       self.rules)
+        self.recoveries: List[RecoveryPlan] = []
+
+    def fail_and_recover(self, failed_rows: int, state_template):
+        """Simulated failure of `failed_rows` data rows; returns the
+        restored state on the shrunken mesh."""
+        from repro.distributed import checkpoint as ckpt
+        plan = plan_recovery(self.spec, failed_rows, self.ckpt_dir)
+        self.recoveries.append(plan)
+        self.spec = MeshSpec(plan.new_mesh_shape, self.spec.axes)
+        self.mesh = build_mesh(self.spec)
+        self.rules = self.rules_fn(self.mesh)
+        self.step, self.state_shardings = self.step_factory(self.mesh,
+                                                            self.rules)
+        if plan.restore_step is None:
+            raise RuntimeError("no checkpoint to recover from")
+        state, _ = ckpt.restore(self.ckpt_dir, plan.restore_step,
+                                state_template,
+                                shardings=self.state_shardings)
+        return state, plan

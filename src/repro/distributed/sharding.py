@@ -1,0 +1,109 @@
+"""Logical-axis -> mesh-axis sharding policies.
+
+The mesh is (data, model) single-pod or (pod, data, model) multi-pod.
+
+Two policies:
+
+``tp`` — the paper-faithful baseline (MaxText-style 2D sharding):
+  * batch           -> (pod, data)         pure DP across pods + data rows
+  * vocab/heads/mlp -> model               Megatron tensor parallelism
+  * experts         -> model               expert parallelism (MoE)
+  * fsdp            -> data                ZeRO-3 parameter+optimizer shard
+  * kv_heads        -> model when divisible, else replicated (GQA with few
+                       KV heads: replication beats GSPMD padding waste)
+  * heads           -> model when >= model-axis size (uneven dims are
+                       GSPMD-padded, e.g. starcoder2's 24 heads -> 32)
+  * seq             -> model (Megatron-SP between blocks)
+
+``zero`` — the beyond-paper optimized policy for train/prefill
+(EXPERIMENTS.md §Perf): student-fleet models are small relative to a
+256-chip pod, so Megatron TP buys nothing and its per-layer activation
+all-reduces dominate the collective term. Instead: pure DP + ZeRO-3.
+  * batch           -> (pod, data)
+  * heads/kv_heads/mlp/seq -> None          (no TP; no SP)
+  * vocab           -> model               (column-parallel unembed keeps
+                                            the (B,S,V) logits sharded —
+                                            CE reduces over V with small
+                                            scalar all-reduces)
+  * experts         -> model               (EP unchanged; MoE FFNs are the
+                                            exception where intra-layer
+                                            parallelism pays)
+  * fsdp            -> data; ("data","model") for very large dense archs
+                       (>=16B: optimizer state would not fit 16-way),
+                       where vocab then reverts to None (axis conflict on
+                       the embedding table).
+
+Decode shapes always use ``tp``: serving is KV-cache-bandwidth-bound and
+sharding KV heads over the model axis is what divides those reads.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+# beyond this many params, fp32 param+Adam state (16 B/param -> 1 B/param
+# per chip at 16-way ZeRO) exceeds a v5e chip's HBM share and params must
+# shard over both mesh axes (256-way)
+_FSDP2D_PARAM_THRESHOLD = 12e9
+
+
+def mesh_rules(mesh, cfg: Optional[ModelConfig] = None, *,
+               fsdp: bool = True, policy: str = "tp") -> dict:
+    axes = dict(mesh.shape)
+    model_n = axes.get("model", 1)
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    batch_rule = batch if len(batch) > 1 else (batch[0] if batch else None)
+    data_n = axes.get("data", 1)
+
+    if policy == "zero":
+        rules = {
+            "batch": batch_rule,
+            "vocab": "model" if model_n > 1 else None,
+            "mlp": None,
+            "experts": "model" if model_n > 1 else None,
+            "heads": None,
+            "kv_heads": None,
+            "fsdp": "data" if (fsdp and data_n > 1) else None,
+            "seq": None,
+            "layers": None,
+        }
+        if cfg is not None and fsdp and model_n > 1 and data_n > 1 \
+                and cfg.moe is None \
+                and cfg.param_count() > _FSDP2D_PARAM_THRESHOLD \
+                and cfg.d_model % (data_n * model_n) == 0:
+            rules["fsdp"] = ("data", "model")
+            rules["vocab"] = None      # embed table: fsdp owns both axes
+        return rules
+
+    assert policy == "tp", policy
+    rules = {
+        "batch": batch_rule,
+        "vocab": "model" if model_n > 1 else None,
+        "mlp": "model" if model_n > 1 else None,
+        "experts": "model" if model_n > 1 else None,
+        "heads": "model" if model_n > 1 else None,
+        "kv_heads": "model" if model_n > 1 else None,
+        "fsdp": "data" if (fsdp and data_n > 1) else None,
+        # Megatron-SP: residual activations (and remat saves) sharded over
+        # the model axis along sequence; GSPMD inserts the all-gather /
+        # reduce-scatter pairs around attention/MLP.
+        "seq": "model" if model_n > 1 else None,
+        "layers": None,
+    }
+    if cfg is not None and model_n > 1:
+        if cfg.num_kv_heads % model_n != 0:
+            rules["kv_heads"] = None          # replicate small KV-head sets
+        # heads are padded per-kv-group up to MAX_HEAD_PAD_RATIO (see
+        # layers.padded_heads); if padding can't make them divisible
+        # cheaply (e.g. hymba's 25 heads / 5 kv), replicate instead.
+        from repro.models.layers import padded_heads
+        if padded_heads(cfg, model_n) % model_n != 0:
+            rules["heads"] = None
+    return rules
+
+
+def batch_pspec(mesh):
+    from jax.sharding import PartitionSpec as P
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0])

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the substrate hot spots.
+
+flash_attention — blockwise online-softmax attention (GQA-aware index
+    maps, causal + sliding-window), grid (B, H, nq, nk) with VMEM
+    accumulator carry on the sequential kv dim.
+mlstm_scan — chunkwise-parallel mLSTM with the (C, n, m) matrix-memory
+    state carried in VMEM scratch across the sequential chunk dim.
+ssd_scan — Mamba-2 SSD chunk scan, (P x N) state in VMEM scratch.
+
+ops.py dispatches pallas/interpret/xla/ref; ref.py holds the pure-jnp
+sequential oracles every kernel is swept against (tests/test_kernels.py).
+The paper itself has no kernel-level contribution — these optimize the
+training/serving substrate its control plane drives (DESIGN.md §6).
+"""

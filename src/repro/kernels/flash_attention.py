@@ -1,0 +1,159 @@
+"""Blockwise online-softmax (flash) attention as a Pallas TPU kernel.
+
+Design (TPU-native, not a CUDA port):
+  * Grid (B, H, nq, nk) — the trailing kv dimension is "arbitrary"
+    (sequential), so the online-softmax running state (m, l, acc) lives in
+    VMEM scratch and carries across kv blocks; q/head/batch dims are
+    parallel.
+  * BlockSpec tiles: q (1, qb, 1, hd), k/v (1, kb, 1, hd) — VMEM working
+    set is O(qb*hd + kb*hd + qb*kb); qb=kb=128 aligns scores (qb x kb) and
+    the (qb x hd) matmuls with the 128x128 MXU.
+  * GQA without repeat: the kv BlockSpec index map sends query head h to
+    kv head h // G, so KV tiles are fetched once per group — the HBM
+    traffic win that matters at decode/prefill.
+  * Causal + sliding-window masking is done with block-level early-exit
+    (whole kv blocks that cannot intersect the mask are skipped before
+    any compute) plus an elementwise mask inside boundary blocks.
+
+Validated in interpret mode against repro.kernels.ref.attention_ref over
+shape/dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 causal: bool, window: int, scale: float, kv_len: int,
+                 q_offset: int, q_block: int, kv_block: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this tile
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0) + q_offset
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+
+    # block-level visibility: skip tiles fully outside the mask
+    blk_q_last = qi * q_block + q_block - 1 + q_offset
+    blk_q_first = qi * q_block + q_offset
+    blk_k_first = ki * kv_block
+    blk_k_last = ki * kv_block + kv_block - 1
+    visible = blk_k_first <= blk_q_last if causal else True
+    if causal and window > 0:
+        visible = jnp.logical_and(visible,
+                                  blk_k_last > blk_q_first - window)
+
+    def compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (qb, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (kb, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+            if window > 0:
+                mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                 # (qb, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if isinstance(visible, bool):
+        compute()
+    else:
+        pl.when(visible)(compute)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)    # fully-masked rows -> zeros
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_block", "kv_block",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 128, kv_block: int = 128,
+                    interpret: bool = False):
+    """q: (B, S, H, hd); k, v: (B, T, K, hd), H % K == 0.
+
+    Causal convention matches ref.attention_ref: query i sits at absolute
+    position i + (T - S) in the key space (supports appended-query
+    layouts). Returns (B, S, H, hd) in q.dtype.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    q_pad = (-S) % qb
+    k_pad = (-T) % kb
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    Sp, Tp = S + q_pad, T + k_pad
+    nq, nk = Sp // qb, Tp // kb
+
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, window=window,
+        scale=1.0 / math.sqrt(hd), kv_len=T, q_offset=T - S,
+        q_block=qb, kv_block=kb)
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, kb, 1, hd),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, kb, 1, hd),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, 1, hd),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),      # running max m
+            pltpu.VMEM((qb, 1), jnp.float32),      # running denom l
+            pltpu.VMEM((qb, hd), jnp.float32),     # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

@@ -1,0 +1,141 @@
+"""Chunkwise-parallel mLSTM (xLSTM matrix memory) as a Pallas TPU kernel.
+
+Design:
+  * Grid (B, H, n_chunks) — the chunk dimension is sequential
+    ("arbitrary"), carrying the (C, n, m) recurrent state in VMEM/SMEM
+    scratch; batch and head dims are parallel.
+  * Per-invocation tiles: q/k/v (1, Q, 1, P) with Q=chunk (default 128)
+    and P=head dim — the (Q x Q) intra-chunk weight matrix and the
+    (P x P) matrix memory both fit VMEM and are MXU-shaped.
+  * All gate math is fp32 with the paper's log-max stabilization:
+      m_t = max(logsig(f) + m_{t-1}, i_t)  carried in log space.
+
+Validated in interpret mode against ref.mlstm_recurrent (the sequential
+oracle) and the XLA chunked form (models.xlstm.mlstm_chunked).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, ig_ref, fg_ref, o_ref,
+                  C_ref, n_ref, m_ref, *, chunk: int, head_dim: int,
+                  seq_len: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+
+    Q, P = chunk, head_dim
+    scale = 1.0 / math.sqrt(P)
+    q = q_ref[0, :, 0, :].astype(F32) * scale              # (Q, P)
+    k = k_ref[0, :, 0, :].astype(F32)
+    v = v_ref[0, :, 0, :].astype(F32)
+    ig = ig_ref[0, :, 0].astype(F32)                       # (Q,)
+    fg = fg_ref[0, :, 0].astype(F32)
+
+    # mask tokens beyond the true sequence end (zero-padded chunks)
+    pos = ci * Q + jax.lax.iota(jnp.int32, Q)
+    valid = pos < seq_len
+    ig = jnp.where(valid, ig, -1e30)                       # never written
+    lf = jnp.where(valid, jax.nn.log_sigmoid(fg), 0.0)     # no decay
+
+    b = jnp.cumsum(lf)                                     # (Q,) inclusive
+    b_last = b[-1]
+
+    C_prev = C_ref[...]                                    # (P, P)
+    n_prev = n_ref[...]                                    # (1, P)
+    m_prev = m_ref[0, 0]
+
+    # ---- intra-chunk log weights: d[i,j] = b_i - b_j + i_j (i >= j) ----
+    d = b[:, None] - b[None, :] + ig[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    d = jnp.where(ii >= jj, d, -jnp.inf)
+    d_inter = b + m_prev                                   # (Q,)
+    m_loc = jnp.maximum(jnp.max(d, axis=1), d_inter)
+    m_loc = jnp.maximum(m_loc, -1e30)
+
+    w_intra = jnp.exp(d - m_loc[:, None])                  # (Q, Q)
+    w_inter = jnp.exp(d_inter - m_loc)                     # (Q,)
+
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)   # (Q, Q)
+    wqk = qk * w_intra
+    h_intra = jax.lax.dot_general(wqk, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=F32)
+    # h_inter[i, p] = w_inter[i] * sum_r q[i, r] C[p, r]
+    h_inter = jax.lax.dot_general(q, C_prev, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=F32)
+    h_num = h_intra + h_inter * w_inter[:, None]
+
+    nq = jnp.sum(wqk, axis=1) + \
+        jnp.sum(q * n_prev, axis=1) * w_inter              # (Q,)
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_loc))
+    o_ref[0, :, 0, :] = (h_num / denom[:, None]).astype(o_ref.dtype)
+
+    # ---- state update toward chunk end ----
+    a = ig + (b_last - b)                                  # (Q,)
+    m_new = jnp.maximum(b_last + m_prev, jnp.max(a))
+    w_old = jnp.exp(b_last + m_prev - m_new)
+    w_in = jnp.exp(a - m_new)                              # (Q,)
+    # C_new[p, r] = w_old * C[p, r] + sum_j w_in[j] v[j, p] k[j, r]
+    C_ref[...] = w_old * C_prev + jax.lax.dot_general(
+        v * w_in[:, None], k, (((0,), (0,)), ((), ())),
+        preferred_element_type=F32)
+    n_ref[...] = w_old * n_prev + jnp.sum(k * w_in[:, None], axis=0,
+                                          keepdims=True)
+    m_ref[0, 0] = m_new
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def mlstm_scan(q, k, v, igate, fgate, *, chunk: int = 128,
+               interpret: bool = False):
+    """q, k, v: (B, S, H, P); igate, fgate: (B, S, H) raw preactivations.
+    Returns h (B, S, H, P) in q.dtype."""
+    B, S, H, P = q.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        z = jnp.zeros((B, pad, H, P), q.dtype)
+        q = jnp.concatenate([q, z], 1)
+        k = jnp.concatenate([k, z], 1)
+        v = jnp.concatenate([v, z], 1)
+        zg = jnp.zeros((B, pad, H), igate.dtype)
+        igate = jnp.concatenate([igate, zg], 1)
+        fgate = jnp.concatenate([fgate, zg], 1)
+    Sp = S + pad
+    nc = Sp // Q
+
+    kernel = functools.partial(_mlstm_kernel, chunk=Q, head_dim=P,
+                               seq_len=S)
+    qkv_spec = pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0))
+    gate_spec = pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[qkv_spec, qkv_spec, qkv_spec, gate_spec, gate_spec],
+        out_specs=qkv_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sp, H, P), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((P, P), F32),       # matrix memory C
+            pltpu.VMEM((1, P), F32),       # normalizer n
+            pltpu.SMEM((1, 1), F32),       # log-max m
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, igate, fgate)
+    return out[:, :S]

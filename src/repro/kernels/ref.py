@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the *definitions of correctness*: deliberately simple,
+materialize-everything implementations that the kernel sweep tests
+(tests/test_kernels.py) compare against with assert_allclose over shape /
+dtype grids. They are also the CPU fallback path of repro.kernels.ops.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Attention oracle
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Materialized softmax attention with GQA.
+
+    q: (B, S, H, hd); k, v: (B, T, K, hd) with H % K == 0.
+    window > 0 limits key visibility to  0 <= i - j < window  (causal
+    sliding window). Returns (B, S, H, hd) in q.dtype.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(F32), kk.astype(F32))
+    s = s / math.sqrt(hd)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        # queries are the last S positions of the T-long key space
+        qpos = i + (T - S)
+        mask &= j <= qpos
+        if window > 0:
+            mask &= (qpos - j) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p, vv.astype(F32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM oracle — strictly sequential recurrence (arXiv:2405.04517 eq. 19-27)
+# ---------------------------------------------------------------------------
+def mlstm_recurrent(q, k, v, igate, fgate, *, init_state=None,
+                    return_state: bool = False):
+    """Token-by-token stabilized mLSTM.
+
+    q, k, v: (B, S, H, P); igate, fgate: (B, S, H) raw preactivations.
+    Returns h (B, S, H, P) [, (C, n, m) final state].
+    """
+    B, S, H, P = q.shape
+    scale = 1.0 / math.sqrt(P)
+    if init_state is None:
+        C = jnp.zeros((B, H, P, P), F32)
+        n = jnp.zeros((B, H, P), F32)
+        m = jnp.full((B, H), -jnp.inf, F32)
+    else:
+        C, n, m = (s.astype(F32) for s in init_state)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs
+        lf = jax.nn.log_sigmoid(ft.astype(F32))
+        it = it.astype(F32)
+        m_new = jnp.maximum(lf + m, it)
+        w_old = jnp.exp(lf + m - m_new)
+        w_in = jnp.exp(it - m_new)
+        C = w_old[..., None, None] * C + w_in[..., None, None] * \
+            jnp.einsum("bhp,bhr->bhpr", vt.astype(F32), kt.astype(F32))
+        n = w_old[..., None] * n + w_in[..., None] * kt.astype(F32)
+        qf = qt.astype(F32) * scale
+        num = jnp.einsum("bhpr,bhr->bhp", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, qf)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), igate.transpose(1, 0, 2),
+          fgate.transpose(1, 0, 2))
+    (C, n, m), hs = jax.lax.scan(step, (C, n, m), xs)
+    h = hs.transpose(1, 0, 2, 3).astype(q.dtype)
+    if return_state:
+        return h, (C, n, m)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba-2) oracle — sequential selective state-space recurrence
+# ---------------------------------------------------------------------------
+def ssd_recurrent(x, dt, A, Bm, Cm, D, *, init_state=None,
+                  return_state: bool = False):
+    """Token-by-token SSD.
+
+    x: (B, S, H, P); dt: (B, S, H) post-softplus; A: (H,) negative;
+    Bm, Cm: (B, S, N); D: (H,). Returns y (B, S, H, P) [, state (B,H,P,N)].
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if init_state is None:
+        st = jnp.zeros((B, H, P, N), F32)
+    else:
+        st = init_state.astype(F32)
+
+    def step(st, xs):
+        xt, dtt, bt, ct = xs
+        dA = dtt.astype(F32) * A.astype(F32)[None, :]           # (B,H)
+        st = jnp.exp(dA)[:, :, None, None] * st + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt.astype(F32), bt.astype(F32),
+            xt.astype(F32))
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(F32), st)
+        y = y + xt.astype(F32) * D.astype(F32)[None, :, None]
+        return st, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    st, ys = jax.lax.scan(step, st, xs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+    if return_state:
+        return y, st
+    return y

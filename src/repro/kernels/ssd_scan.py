@@ -1,0 +1,110 @@
+"""Mamba-2-style SSD chunk scan as a Pallas TPU kernel (hymba SSM heads).
+
+Design:
+  * Grid (B, H, n_chunks): chunk dim sequential ("arbitrary"), carrying
+    the (P x N) per-head SSM state in VMEM scratch; batch/head parallel.
+  * Tiles: x (1, Q, 1, P); B/C (1, Q, N) shared across heads (single
+    group, as in hymba); dt (1, Q, 1); A and D enter as (1,)-blocks of
+    per-head scalars. Intra-chunk work is the (Q x Q) masked decay matmul
+    — MXU-shaped at Q=128.
+  * Everything in fp32; the decay is computed in log space
+    (cumsum of dt * A) and exponentiated once per term.
+
+Validated in interpret mode against ref.ssd_recurrent and the XLA
+chunked form (models.ssm.ssd_chunked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref,
+                st_ref, *, chunk: int, seq_len: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    Q = chunk
+    x = x_ref[0, :, 0, :].astype(F32)                      # (Q, P)
+    dt = dt_ref[0, :, 0].astype(F32)                       # (Q,)
+    A = a_ref[0].astype(F32)                               # scalar
+    Bm = b_ref[0].astype(F32)                              # (Q, N)
+    Cm = c_ref[0].astype(F32)                              # (Q, N)
+    D = d_ref[0].astype(F32)                               # scalar
+
+    pos = ci * Q + jax.lax.iota(jnp.int32, Q)
+    dt = jnp.where(pos < seq_len, dt, 0.0)                 # pad: no-op steps
+
+    dA = dt * A                                            # (Q,) log decay
+    cum = jnp.cumsum(dA)
+    seg_end = cum[-1]
+
+    # ---- intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i.B_j) x_j
+    li = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    Lmat = jnp.where(ii >= jj, jnp.exp(li), 0.0) * dt[None, :]
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)   # (Q, Q)
+    W = CB * Lmat
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=F32)    # (Q, P)
+
+    # ---- inter-chunk: y_i += exp(cum_i) * C_i . state_prev (N,P) ----
+    st_prev = st_ref[...]                                  # (N, P)
+    y = y + jax.lax.dot_general(Cm, st_prev, (((1,), (0,)), ((), ())),
+                                preferred_element_type=F32) \
+        * jnp.exp(cum)[:, None]
+
+    o_ref[0, :, 0, :] = (y + x * D).astype(o_ref.dtype)
+
+    # ---- state update: st[n,p] = exp(seg_end) st + sum_j w_j B[j,n] x[j,p]
+    wj = jnp.exp(seg_end - cum) * dt                       # (Q,)
+    st_ref[...] = jnp.exp(seg_end) * st_prev + jax.lax.dot_general(
+        Bm * wj[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=F32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
+             interpret: bool = False):
+    """x: (B, S, H, P); dt: (B, S, H) post-softplus; A, D: (H,);
+    Bm, Cm: (B, S, N). Returns y (B, S, H, P) in x.dtype."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q, seq_len=S)
+    x_spec = pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0))
+    dt_spec = pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h))
+    bc_spec = pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0))
+    sc_spec = pl.BlockSpec((1,), lambda b, h, c: (h,))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[x_spec, dt_spec, sc_spec, bc_spec, bc_spec, sc_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sp, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), F32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D)
+    return out[:, :S]

@@ -1,0 +1,324 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count on first init). Everything else follows.
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, TrainConfig, cell_is_runnable, get_config
+from repro.configs.base import MOE
+from repro.distributed.sharding import mesh_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model, input_specs
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import abstract_state, make_train_step
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e target)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (1 effective link assumed)
+
+_COLL_RE = re.compile(
+    r"(\w+[\d\.]*)\s*=\s*((?:\(|)[a-z0-9\[\],{}#: ()]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire-byte estimate per collective kind, parsed from the
+    post-SPMD (local shapes) HLO. all-reduce counts 2x its result bytes
+    (reduce-scatter + all-gather phases of a ring)."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "total": 0}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^[%\w\.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute"):
+            if re.match(rf"^[a-z0-9\[\],{{}}#:. ()]*{k}(-start)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        # result shape(s) precede the op name on the rhs
+        shape_txt = rhs.split(kind)[0]
+        b = _shape_bytes(shape_txt)
+        if kind == "all-reduce":
+            b *= 2
+        out[kind] += b
+        out["total"] += b
+    return out
+
+
+def roofline(flops, hbm_bytes, coll_bytes):
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": coll_bytes / LINK_BW,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               remat: str = "full", moe_impl: str = None,
+               capacity_factor: float = 1.25, fsdp: bool = True,
+               extra_rules: dict = None, policy: str = "tp"):
+    """Lower + compile one (arch, shape, mesh) cell. Returns result dict.
+
+    policy: "tp" (paper-faithful baseline) | "zero" (optimized; decode
+    shapes fall back to tp — KV-cache sharding needs the model axis)."""
+    cfg = get_config(arch)
+    status = cell_is_runnable(cfg, shape_name)
+    if status != "ok":
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": status}
+
+    shape = SHAPES[shape_name]
+    orig_policy = policy
+    if policy == "zero" and shape.kind == "decode":
+        policy = "tp"   # KV-cache sharding needs the model axis
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = mesh_rules(mesh, cfg, fsdp=fsdp, policy=policy)
+    data_ways = mesh.shape.get("pod", 1) * mesh.shape["data"]
+    if policy == "zero":
+        # The model axis must carry real work. Pure DP (batch over every
+        # axis) when the global batch divides the chip count. Otherwise:
+        # SSM families get explicit sequence parallelism (shard_map —
+        # GSPMD cannot shard the chunk recurrence); attention families
+        # fall back to the tp policy, because GSPMD also cannot
+        # spatially shard the blockwise-attention lax.scan (measured:
+        # CP replicates q 16x — EXPERIMENTS.md §Perf H6).
+        from repro.configs.base import SSM as _SSM_F
+        all_axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.shape)
+        n_chips = data_ways * mesh.shape["model"]
+        if shape.global_batch % n_chips == 0:
+            # vocab TP would reuse the model axis -> conflict; with one
+            # sequence per device the full-vocab logits are small anyway
+            rules = dict(rules, batch=all_axes, vocab=None)
+        elif cfg.family == _SSM_F:
+            rules = dict(rules, seq="model")
+            if shape.global_batch % data_ways != 0:
+                rules = dict(rules, batch=None)
+        else:
+            policy = "tp"
+            rules = mesh_rules(mesh, cfg, fsdp=fsdp, policy="tp")
+    # single-stream decode cannot shard batch
+    if shape.global_batch < data_ways:
+        rules = dict(rules, batch=None)
+    if shape.kind == "decode":
+        rules = dict(rules, seq=None)   # S=1 at decode
+    if extra_rules:
+        rules = dict(rules, **extra_rules)
+    if moe_impl is None:
+        moe_impl = "ep" if cfg.family == MOE else "dense"
+    # SSM-family sequence dims cannot be GSPMD-sharded (the chunk
+    # recurrence serializes into per-chunk state all-reduces); the zero
+    # policy uses the explicit shard_map sequence-parallel path instead
+    from repro.configs.base import SSM as _SSM
+    ssm_impl = ("seqpar" if policy == "zero" and cfg.family == _SSM
+                and rules.get("seq") == "model" else "gspmd")
+    if ssm_impl == "seqpar":
+        rules = dict(rules, seq=None)   # shard_map owns the seq axis
+
+    model = build_model(cfg, ep=mesh.shape["model"],
+                        tp=mesh.shape["model"] if rules.get("heads") else 1)
+    tcfg = TrainConfig(remat=remat)
+    specs = input_specs(cfg, shape_name, mesh, rules)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        step = make_train_step(model, tcfg, mesh=mesh, rules=rules,
+                               moe_impl=moe_impl, ssm_impl=ssm_impl)
+        state = abstract_state(model, mesh, rules, tcfg)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=0).lower(
+                state, {"inputs": specs["inputs"], "labels": specs["labels"]})
+    elif shape.kind == "prefill":
+        cap = shape.seq_len + cfg.meta_tokens
+        if cfg.causal:
+            pf = make_prefill_step(model, cap, mesh=mesh, rules=rules,
+                                   moe_impl=moe_impl, ssm_impl=ssm_impl)
+        else:  # encoder-only: full-sequence encode, no cache
+            from repro.serve.serve_step import make_encode_step
+            pf = make_encode_step(model, mesh=mesh, rules=rules)
+        # optimized profile serves bf16 weights (standard inference
+        # practice): halves param gathers and HBM reads
+        serve_dtype = jnp.bfloat16 if policy == "zero" else jnp.float32
+        params = model.abstract_params(mesh, rules, serve_dtype)
+        with mesh:
+            lowered = jax.jit(pf).lower(params, specs["inputs"])
+    else:  # decode
+        dec = make_decode_step(model, mesh=mesh, rules=rules,
+                               moe_impl=moe_impl)
+        serve_dtype = (jnp.bfloat16 if orig_policy == "zero"
+                       else jnp.float32)
+        params = model.abstract_params(mesh, rules, serve_dtype)
+        with mesh:
+            lowered = jax.jit(dec, donate_argnums=2).lower(
+                params, specs["token"], specs["cache"],
+                jnp.array(shape.seq_len + cfg.meta_tokens - 1, jnp.int32))
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    base_cost = {"flops": float(ca.get("flops", 0.0)),
+                 "bytes": float(ca.get("bytes accessed", 0.0)),
+                 "coll": collective_bytes(hlo)}
+    # scan-body correction: add (count-1) x per-segment layer cost
+    from repro.launch import roofline as RL
+    t0 = time.time()
+    total_cost, per_layer = RL.corrected_cost(
+        cfg, base_cost, mesh=mesh, rules=rules,
+        batch=shape.global_batch, seq=shape.seq_len, kind=shape.kind,
+        moe_impl=moe_impl, remat=remat, collective_fn=collective_bytes,
+        capacity_factor=capacity_factor, ssm_impl=ssm_impl)
+    t_layers = time.time() - t0
+    flops = total_cost["flops"]
+    bytes_accessed = total_cost["bytes"]
+    coll = total_cost["coll"]
+    terms = roofline(flops, bytes_accessed, coll["total"])
+
+    n_chips = 512 if multi_pod else 256
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+    model_flops_per_chip = model_flops / n_chips
+
+    dominant = max(terms, key=terms.get)
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "moe_impl": moe_impl,
+        "policy": orig_policy,
+        "effective_policy": policy,
+        "ssm_impl": ssm_impl,
+        "remat": remat,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "t_layer_costs_s": round(t_layers, 1),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll,
+        "base_cost_uncorrected": base_cost,
+        "per_layer_costs": per_layer,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+        },
+        "roofline": terms,
+        "dominant": dominant,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flops_ratio": (model_flops_per_chip / flops) if flops else 0.0,
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (model_flops_per_chip / PEAK_FLOPS)
+            / max(terms.values()) if max(terms.values()) > 0 else 0.0,
+    }
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--capacity-factor", type=float, default=1.25)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--policy", choices=["tp", "zero"], default="tp")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status", "").startswith(("ok", "skip"))}
+
+    for arch in archs:
+        for shape in shapes:
+            for m in meshes:
+                key = (arch, shape, m)
+                if key in done:
+                    continue
+                print(f"=== {arch} x {shape} x {m} ===", flush=True)
+                try:
+                    r = lower_cell(arch, shape, multi_pod=(m == "multi"),
+                                   remat=args.remat, moe_impl=args.moe_impl,
+                                   capacity_factor=args.capacity_factor,
+                                   fsdp=not args.no_fsdp,
+                                   policy=args.policy)
+                except Exception as e:
+                    traceback.print_exc()
+                    r = {"arch": arch, "shape": shape, "mesh": m,
+                         "status": f"error: {type(e).__name__}: {str(e)[:300]}"}
+                results.append(r)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if r["status"] == "ok":
+                    print(f"  compile={r['t_compile_s']}s "
+                          f"flops/dev={r['flops_per_device']:.3e} "
+                          f"dominant={r['dominant']} "
+                          f"roofline_frac={r['roofline_fraction']:.3f}",
+                          flush=True)
+                else:
+                    print(f"  {r['status']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Roofline accounting with scan-body correction.
+
+XLA's HLO cost analysis counts while-loop bodies ONCE, so a scan-over-
+layers model reports ~one layer of FLOPs. We correct compositionally:
+
+    total_cost = cost(full model with scans)            # loop bodies x1
+               + sum_seg (seg.count - 1) * cost(one segment layer)
+
+The per-segment layer cost is obtained by compiling a standalone
+fwd(+bwd, with jax.checkpoint to reproduce remat recompute) of one layer
+under the same mesh/shardings. Inner scans are disabled for the layer
+cost compile (q_chunk = full seq) so attention FLOPs are not undercounted
+— the math is identical, only the schedule differs.
+
+Known residual undercount: the sLSTM time-step scan body (xlstm) — its
+per-step FLOPs are negligible vs the block's matmuls; noted in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HYBRID, MOE, SSM, ModelConfig
+from repro.models import transformer as T
+from repro.models import param as P
+from repro.models import xlstm as xlstm_lib
+from repro.models.transformer import Segment, ShardCtx
+
+
+def _layer_spec(cfg: ModelConfig, seg: Segment, ep: int, tp: int = 1):
+    if seg.kind == "block":
+        return T._block_spec(cfg, ep, tp)
+    if seg.kind == "mlstm":
+        return xlstm_lib.mlstm_block_spec(cfg)
+    if seg.kind == "slstm":
+        return xlstm_lib.slstm_block_spec(cfg)
+    raise ValueError(seg.kind)
+
+
+def _cost_dict(compiled, collective_fn):
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_fn(hlo)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def _add(a, b, k=1):
+    return {
+        "flops": a["flops"] + k * b["flops"],
+        "bytes": a["bytes"] + k * b["bytes"],
+        "coll": {kk: a["coll"][kk] + k * b["coll"][kk] for kk in a["coll"]},
+    }
+
+
+def segment_layer_cost(cfg: ModelConfig, seg: Segment, *, mesh, rules,
+                       batch: int, seq: int, kind: str, moe_impl: str,
+                       remat: str, collective_fn, capacity_factor=1.25,
+                       cache_slice=None, ssm_impl: str = "gspmd"):
+    """Compile one layer of `seg` and return its cost dict.
+
+    kind: "train" (fwd+bwd via vjp, checkpoint-wrapped) | "prefill" (fwd)
+          | "decode" (single-token step against a cache slice).
+    """
+    from jax.sharding import NamedSharding
+
+    ep = mesh.shape.get("model", 1)
+    tp = ep if (rules or {}).get("heads") else 1
+    spec = _layer_spec(cfg, seg, ep, tp)
+    lp = P.abstract_params(spec, mesh, rules, jnp.float32)
+    ctx = ShardCtx(mesh, rules)
+    bspec = P.logical_to_pspec(("batch", None, None), rules)
+    S_tot = seq + (cfg.meta_tokens if seg.kind == "block" else 0)
+    x_s = jax.ShapeDtypeStruct((batch, S_tot, cfg.d_model), jnp.bfloat16,
+                               sharding=NamedSharding(mesh, bspec))
+
+    if kind == "decode":
+        x1 = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.bfloat16,
+                                  sharding=NamedSharding(mesh, bspec))
+        cache_abs = cache_slice
+
+        def dec(lp, x, cache):
+            pos = jnp.array(S_tot - 1, jnp.int32)
+            if seg.kind == "block":
+                return T._block_decode(cfg, lp, x, cache, pos, ctx,
+                                       window=seg.window, moe_impl=moe_impl,
+                                       mesh=mesh,
+                                       capacity_factor=capacity_factor)
+            if seg.kind == "mlstm":
+                return xlstm_lib.apply_mlstm_block(cfg, lp, x, cache=cache)
+            return xlstm_lib.apply_slstm_block(cfg, lp, x, cache=cache)
+
+        with mesh:
+            compiled = jax.jit(dec).lower(lp, x1, cache_abs).compile()
+        return _cost_dict(compiled, collective_fn)
+
+    positions = jnp.broadcast_to(jnp.arange(S_tot), (batch, S_tot))
+
+    def fwd(lp, x):
+        if seg.kind == "block":
+            y, aux, _ = T._block_forward(
+                cfg, lp, x, positions, ctx, window=seg.window,
+                moe_impl=moe_impl, mesh=mesh,
+                capacity_factor=capacity_factor, collect_cache=False,
+                q_chunk=S_tot)
+            return y
+        if seg.kind == "mlstm":
+            if ssm_impl == "seqpar":
+                return xlstm_lib.apply_mlstm_block_seqpar(
+                    cfg, lp, x, mesh, batch_axes=T._batch_axes(mesh))
+            return xlstm_lib.apply_mlstm_block(cfg, lp, x)[0]
+        return xlstm_lib.apply_slstm_block(cfg, lp, x)[0]
+
+    if kind == "prefill":
+        with mesh:
+            compiled = jax.jit(fwd).lower(lp, x_s).compile()
+        return _cost_dict(compiled, collective_fn)
+
+    # train: fwd + bwd with remat-equivalent recompute
+    f = jax.checkpoint(fwd) if remat != "none" else fwd
+
+    def train_one(lp, x, ct):
+        y, vjp = jax.vjp(f, lp, x)
+        dlp, dx = vjp(ct)
+        return y, dlp, dx
+
+    with mesh:
+        compiled = jax.jit(train_one).lower(lp, x_s, x_s).compile()
+    return _cost_dict(compiled, collective_fn)
+
+
+def corrected_cost(cfg: ModelConfig, base_cost: dict, *, mesh, rules,
+                   batch: int, seq: int, kind: str, moe_impl: str,
+                   remat: str, collective_fn, capacity_factor=1.25,
+                   ssm_impl: str = "gspmd"):
+    """base_cost: cost dict of the full scanned model (bodies counted x1).
+    Adds (count-1) x per-layer cost for every segment. Returns
+    (total_cost, per_layer_costs)."""
+    from repro.models.param import Spec, tree_map_specs
+
+    total = base_cost
+    per_layer = []
+    cache_spec_tree = None
+    if kind == "decode":
+        cap = seq + cfg.meta_tokens
+        cache_spec_tree = T.cache_spec(cfg, batch, cap)
+    for i, seg in enumerate(T.layer_plan(cfg)):
+        cache_slice = None
+        if kind == "decode":
+            one = tree_map_specs(
+                lambda s: Spec(s.shape[1:], s.axes[1:], s.init),
+                cache_spec_tree["segments"][i])
+            cache_slice = P.abstract_params(one, mesh, rules, jnp.bfloat16)
+        lc = segment_layer_cost(
+            cfg, seg, mesh=mesh, rules=rules, batch=batch, seq=seq,
+            kind=kind, moe_impl=moe_impl, remat=remat,
+            collective_fn=collective_fn, capacity_factor=capacity_factor,
+            cache_slice=cache_slice, ssm_impl=ssm_impl)
+        per_layer.append({"kind": seg.kind, "window": seg.window,
+                          "count": seg.count, **lc})
+        if seg.count > 1:
+            total = _add(total, lc, seg.count - 1)
+    return total, per_layer

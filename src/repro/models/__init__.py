@@ -1,0 +1,2 @@
+from repro.models.model import Model, build_model, input_specs  # noqa: F401
+from repro.models.transformer import ShardCtx, NULL_CTX  # noqa: F401

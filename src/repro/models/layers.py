@@ -1,0 +1,383 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full / sliding
+window with meta-token prefix / decode-against-cache), MLPs.
+
+Conventions
+-----------
+* Activations: (batch, seq, d_model) or (batch, seq, heads, head_dim).
+* Params are fp32; compute happens in `compute_dtype` (bf16 by default)
+  with softmax/normalization in fp32.
+* All functions are sharding-agnostic; the transformer applies
+  with_sharding_constraint at block boundaries.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import Spec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_spec(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": Spec((d,), (None,), "ones")}
+    if cfg.norm == "layernorm":
+        return {"scale": Spec((d,), (None,), "ones"),
+                "bias": Spec((d,), (None,), "zeros")}
+    if cfg.norm == "nonparam_ln":   # olmo: no learnable affine
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(cfg: ModelConfig, params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps: float = 1e-6):
+    """qk-norm: RMS-normalize over head_dim (chameleon / qwen3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+MAX_HEAD_PAD_RATIO = 1.5
+
+
+def padded_heads(cfg: ModelConfig, tp: int) -> int:
+    """Query-head count padded *per KV group* so the head axis shards
+    `tp`-ways while preserving the GQA head->kv mapping (head i uses kv
+    head i // G_pad). Returns cfg.num_heads unchanged when no padding is
+    needed or when padding would waste more than MAX_HEAD_PAD_RATIO
+    (the sharding policy then replicates heads instead — see
+    repro.distributed.sharding.mesh_rules)."""
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    if tp <= 1 or H % tp == 0:
+        return H
+    g = H // K
+    while (K * g) % tp:
+        g += 1
+    H_pad = K * g
+    return H_pad if H_pad <= MAX_HEAD_PAD_RATIO * H else H
+
+
+def head_mask(cfg: ModelConfig, H_pad: int, dtype):
+    """(H_pad,) 1/0 mask of real vs padded q heads; None when unpadded."""
+    if H_pad == cfg.num_heads:
+        return None
+    G_pad = H_pad // cfg.num_kv_heads
+    G = cfg.num_heads // cfg.num_kv_heads
+    return (jnp.arange(H_pad) % G_pad < G).astype(dtype)
+
+
+def _mask_heads(cfg: ModelConfig, o):
+    """Zero padded heads of o (..., H_pad, hd) so they contribute nothing
+    to the output projection and receive no gradient."""
+    m = head_mask(cfg, o.shape[-2], o.dtype)
+    return o if m is None else o * m[..., :, None]
+
+
+def attention_spec(cfg: ModelConfig, tp: int = 1):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = padded_heads(cfg, tp), cfg.num_kv_heads
+    spec = {
+        "wq": Spec((d, H, hd), ("fsdp", "heads", None)),
+        "wk": Spec((d, K, hd), ("fsdp", "kv_heads", None)),
+        "wv": Spec((d, K, hd), ("fsdp", "kv_heads", None)),
+        "wo": Spec((H, hd, d), ("heads", None, "fsdp"), scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = Spec((hd,), (None,), "ones")
+        spec["k_norm"] = Spec((hd,), (None,), "ones")
+    return spec
+
+
+def _qkv(cfg: ModelConfig, p, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    if cfg.rope_theta and cfg.family != "encoder" and cfg.causal:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k, H: int):
+    """(B,T,K,hd) -> (B,T,H,hd) by repeating each KV head H//K times.
+    Flat-head layout keeps the head axis cleanly shardable (a (K,G)
+    reshape defeats GSPMD when K < the model-axis size)."""
+    K = k.shape[2]
+    if K == H:
+        return k
+    return jnp.repeat(k, H // K, axis=2)
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,hd), k: (B,T,K,hd) -> scores (B,H,S,T) in fp32."""
+    hd = q.shape[-1]
+    kk = _repeat_kv(k, q.shape[2])
+    s = jnp.einsum("bshd,bthd->bhst", q, kk).astype(jnp.float32)
+    return s / math.sqrt(hd)
+
+
+def _gqa_out(probs, v, out_dtype):
+    """probs: (B,H,S,T) fp32; v: (B,T,K,hd) -> (B,S,H,hd)."""
+    vv = _repeat_kv(v, probs.shape[1])
+    o = jnp.einsum("bhst,bthd->bshd", probs.astype(vv.dtype), vv)
+    return o.astype(out_dtype)
+
+
+def attention_full(cfg: ModelConfig, p, x, positions, *, causal: bool,
+                   q_chunk: int = 1024):
+    """Full (possibly causal) attention, computed in sequential query
+    chunks so peak memory is O(q_chunk * S) rather than O(S^2). Exact.
+    x: (B,S,D).
+    """
+    q, k, v = _qkv(cfg, p, x, positions)
+    B, S, H, hd = q.shape
+    qc = min(q_chunk, S)
+    pad = (-S) % qc          # pad queries only; keys stay length S, so
+    if pad:                  # padded-query rows are garbage we slice off
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    n = Sp // qc
+    scale = 1.0 / math.sqrt(hd)
+    kk = _repeat_kv(k, H)
+    vv = _repeat_kv(v, H)
+    qr = q.reshape(B, n, qc, H, hd).transpose(1, 0, 2, 3, 4)
+    t = jnp.arange(S)
+
+    def body(_, xs):
+        qi, ci = xs                                      # (B,qc,H,hd), scalar
+        s = jnp.einsum("bahd,bthd->bhat", qi, kk).astype(jnp.float32) * scale
+        if causal:
+            q_abs = ci * qc + jnp.arange(qc)
+            s = jnp.where((t[None, :] <= q_abs[:, None])[None, None],
+                          s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhat,bthd->bahd", probs.astype(vv.dtype), vv)
+        return None, o
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), None,
+                           (qr, jnp.arange(n)))
+    o = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, hd)[:, :S]
+    o = o.astype(x.dtype)
+    o = _mask_heads(cfg, o)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), (k, v)
+
+
+def attention_windowed(cfg: ModelConfig, p, x, positions, *, window: int,
+                       meta: int):
+    """Exact sliding-window causal attention with an always-visible meta
+    prefix, computed blockwise in O(S * (2*window + meta)).
+
+    Visibility of key j from query i (i >= j):
+      (i - j < window)  OR  (j < meta).
+    """
+    B, S, D = x.shape
+    w = window
+    q, k, v = _qkv(cfg, p, x, positions)
+    H, hd = q.shape[2], q.shape[3]
+    K = k.shape[2]
+    G = H // K
+
+    pad = (-S) % w
+    Sp = S + pad
+    n = Sp // w
+    if pad:
+        zq = jnp.zeros((B, pad, H, hd), q.dtype)
+        zk = jnp.zeros((B, pad, K, hd), k.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zk], 1)
+        v = jnp.concatenate([v, zk], 1)
+
+    kf = _repeat_kv(k, H)                                # flat heads
+    vf = _repeat_kv(v, H)
+    qc = q.reshape(B, n, w, H, hd)
+    kc = kf.reshape(B, n, w, H, hd)
+    vc = vf.reshape(B, n, w, H, hd)
+    # previous chunk (zero for chunk 0)
+    kp = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], 1)
+    vp = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], 1)
+    kcat = jnp.concatenate([kp, kc], 2)                  # (B,n,2w,H,hd)
+    vcat = jnp.concatenate([vp, vc], 2)
+
+    scores = jnp.einsum("bnahd,bnchd->bnhac", qc, kcat).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+
+    # mask: query abs pos = c*w + a; key abs pos = (c-1)*w + cidx
+    a = jnp.arange(w)
+    cidx = jnp.arange(2 * w)
+    rel = a[:, None] + w - cidx[None, :]                 # i - j
+    win_ok = (rel >= 0) & (rel < w)                      # (w, 2w)
+    ci = jnp.arange(n)
+    key_abs = (ci[:, None] - 1) * w + cidx[None, :]      # (n, 2w)
+    valid_key = (key_abs >= 0) & (key_abs < S)           # excludes chunk-0 "prev"
+    mask = win_ok[None] & valid_key[:, None, :]          # (n, w, 2w)
+    scores = jnp.where(mask[None, :, None], scores, NEG_INF)
+
+    if meta > 0:
+        # meta block: keys [0, meta); visible from query abs i iff not
+        # already covered by the windowed path: j <= i - w.
+        km = kf[:, :meta]                                # (B,meta,H,hd)
+        vm = vf[:, :meta]
+        ms = jnp.einsum("bnahd,bmhd->bnham", qc, km).astype(jnp.float32)
+        ms = ms / math.sqrt(hd)
+        q_abs = ci[:, None] * w + a[None, :]             # (n, w)
+        j = jnp.arange(meta)
+        mmask = j[None, None, :] <= (q_abs[..., None] - w)
+        ms = jnp.where(mmask[None, :, None], ms, NEG_INF)
+        scores = jnp.concatenate([ms, scores], axis=-1)
+        vcat = jnp.concatenate(
+            [jnp.broadcast_to(vm[:, None], (B, n) + vm.shape[1:]), vcat], 2)
+
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bnhac,bnchd->bnahd", probs.astype(vcat.dtype), vcat)
+    o = o.reshape(B, Sp, H, hd)[:, :S].astype(x.dtype)
+    o = _mask_heads(cfg, o)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), (k[:, :S], v[:, :S])
+
+
+def attention_decode(cfg: ModelConfig, p, x, cache, pos, *, window: int,
+                     meta: int):
+    """Single-token decode. x: (B,1,D); pos: scalar absolute position of
+    the new token. cache dict:
+      full   : {"k","v": (B,cap,K,hd)}        — global layers
+      sliding: {"k","v": (B,window,K,hd), "mk","mv": (B,meta,K,hd)}
+    Returns (out (B,1,D), new_cache).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos)
+    q, k, v = _qkv(cfg, p, x, positions)                 # k,v: (B,1,K,hd)
+    new_cache = dict(cache)
+    if window <= 0:
+        cap = cache["k"].shape[1]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+        new_cache.update(k=ck, v=cv)
+        t = jnp.arange(cap)
+        key_mask = t <= pos
+        kk, vv = ck, cv
+    else:
+        wcap = cache["k"].shape[1]
+        slot = jnp.mod(pos, wcap)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+        new_cache.update(k=ck, v=cv)
+        t = jnp.arange(wcap)
+        # stored abs position in slot s: last value <= pos congruent to s
+        stored = pos - jnp.mod(pos - t, wcap)
+        key_mask = (stored >= meta) & (stored <= pos) & (stored > pos - wcap)
+        kk, vv = ck, cv
+
+    scores = _gqa_scores(q, kk)                          # (B,H,1,cap)
+    scores = jnp.where(key_mask[None, None, None, :], scores, NEG_INF)
+    if window > 0 and meta > 0:
+        msc = _gqa_scores(q, cache["mk"])
+        scores = jnp.concatenate([msc, scores], -1)
+        vv = jnp.concatenate([cache["mv"], vv], 1)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_out(probs, vv, x.dtype)
+    o = _mask_heads(cfg, o)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {"w_gate": Spec((d, f), ("fsdp", "mlp")),
+                "w_up": Spec((d, f), ("fsdp", "mlp")),
+                "w_down": Spec((f, d), ("mlp", "fsdp"),
+                               scale=1.0 / math.sqrt(2 * cfg.num_layers))}
+    return {"w_in": Spec((d, f), ("fsdp", "mlp")),
+            "w_down": Spec((f, d), ("mlp", "fsdp"),
+                           scale=1.0 / math.sqrt(2 * cfg.num_layers))}
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    dt = x.dtype
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(dt)))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def padded_vocab(cfg: ModelConfig) -> int:
+    return ((cfg.vocab_size + 127) // 128) * 128
+
+
+def embedding_spec(cfg: ModelConfig):
+    V = padded_vocab(cfg)
+    spec = {"table": Spec((V, cfg.d_model), ("vocab", "fsdp"), "embed")}
+    if not cfg.tie_embeddings:
+        spec["unembed"] = Spec((cfg.d_model, V), ("fsdp", "vocab"), "embed")
+    return spec
+
+
+def embed_tokens(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["table"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(x.dtype))
+    V = padded_vocab(cfg)
+    if V != cfg.vocab_size:   # mask padded vocab entries
+        pad_mask = jnp.arange(V) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, NEG_INF, logits.astype(jnp.float32)).astype(logits.dtype)
+    return logits

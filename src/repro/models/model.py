@@ -1,0 +1,130 @@
+"""Public model API: one entry point per architecture family.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    logits, aux = model.apply(params, tokens)
+    last, cache, pos = model.prefill(params, tokens, cap)
+    logits, cache = model.decode(params, token, cache, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES
+from repro.models import transformer as T
+from repro.models import param as P
+from repro.models.transformer import NULL_CTX, ShardCtx
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    spec: Any
+    ep: int = 1
+    tp: int = 1
+
+    # ---- parameters -------------------------------------------------------
+    def init(self, key, dtype=jnp.float32):
+        return P.init_params(self.spec, key, dtype)
+
+    def abstract_params(self, mesh, rules, dtype=jnp.float32):
+        return P.abstract_params(self.spec, mesh, rules, dtype)
+
+    def param_shardings(self, mesh, rules):
+        return P.shardings(self.spec, mesh, rules)
+
+    def num_params(self) -> int:
+        return P.param_count(self.spec)
+
+    # ---- compute ----------------------------------------------------------
+    def apply(self, params, inputs, *, ctx: ShardCtx = NULL_CTX, mesh=None,
+              moe_impl: str = "dense", remat: str = "none",
+              compute_dtype=jnp.bfloat16, capacity_factor: float = 1.25,
+              ssm_impl: str = "gspmd"):
+        logits, aux, _ = T.forward(
+            self.cfg, params, inputs, ctx=ctx, mesh=mesh, moe_impl=moe_impl,
+            remat=remat, compute_dtype=compute_dtype,
+            capacity_factor=capacity_factor, ssm_impl=ssm_impl)
+        return logits, aux
+
+    def prefill(self, params, inputs, cap: int, *, ctx: ShardCtx = NULL_CTX,
+                mesh=None, moe_impl: str = "dense",
+                compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                capacity_factor: float = 1.25, ssm_impl: str = "gspmd"):
+        return T.prefill(self.cfg, params, inputs, cap, ctx=ctx, mesh=mesh,
+                         moe_impl=moe_impl, compute_dtype=compute_dtype,
+                         cache_dtype=cache_dtype,
+                         capacity_factor=capacity_factor,
+                         ssm_impl=ssm_impl)
+
+    def decode(self, params, token, cache, pos, *, ctx: ShardCtx = NULL_CTX,
+               mesh=None, moe_impl: str = "dense",
+               compute_dtype=jnp.bfloat16, capacity_factor: float = 1.25):
+        return T.decode_step(self.cfg, params, token, cache, pos, ctx=ctx,
+                             mesh=mesh, moe_impl=moe_impl,
+                             compute_dtype=compute_dtype,
+                             capacity_factor=capacity_factor)
+
+    # ---- cache ------------------------------------------------------------
+    def cache_spec(self, batch: int, cap: int):
+        return T.cache_spec(self.cfg, batch, cap)
+
+    def init_cache(self, batch: int, cap: int, dtype=jnp.bfloat16):
+        spec = self.cache_spec(batch, cap)
+        return P.tree_map_specs(
+            lambda s: (jnp.full(s.shape, -jnp.inf, jnp.float32)
+                       if s.init == "neg_inf" else
+                       jnp.zeros(s.shape, jnp.float32 if s.init == "neg_inf"
+                                 else dtype)), spec)
+
+    def abstract_cache(self, batch: int, cap: int, mesh, rules,
+                       dtype=jnp.bfloat16):
+        return P.abstract_params(self.cache_spec(batch, cap), mesh, rules,
+                                 dtype)
+
+
+def build_model(cfg: ModelConfig, *, ep: int = 1, tp: int = 1) -> Model:
+    return Model(cfg=cfg, spec=T.build_spec(cfg, ep=ep, tp=tp), ep=ep, tp=tp)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch, shape) — ShapeDtypeStruct stand-ins for the dry-run
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape_name: str, mesh=None, rules=None):
+    """Abstract inputs for a cell. For decode shapes this includes the
+    cache tree. With mesh/rules, ShapeDtypeStructs carry NamedShardings."""
+    from jax.sharding import NamedSharding
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+
+    def struct(shp, dtype, axes):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        return jax.ShapeDtypeStruct(
+            shp, dtype,
+            sharding=NamedSharding(mesh, P.logical_to_pspec(axes, rules)))
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.embedding_frontend:
+            toks = struct((B, S, cfg.d_model), jnp.bfloat16,
+                          ("batch", None, None))
+        else:
+            toks = struct((B, S), jnp.int32, ("batch", None))
+        if shape.kind == "train":
+            return {"inputs": toks,
+                    "labels": struct((B, S), jnp.int32, ("batch", None))}
+        return {"inputs": toks}
+    # decode: one new token with a cache of S (absolute space incl. meta)
+    cap = S + cfg.meta_tokens
+    model = build_model(cfg, ep=(mesh.shape.get("model", 1) if mesh else 1))
+    cache = (model.abstract_cache(B, cap, mesh, rules) if mesh is not None
+             else P.tree_map_specs(
+                 lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+                 model.cache_spec(B, cap)))
+    return {"token": struct((B, 1), jnp.int32, ("batch", None)),
+            "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

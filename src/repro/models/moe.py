@@ -1,0 +1,241 @@
+"""Mixture-of-Experts: top-k routing with capacity-based dispatch.
+
+Two execution paths share the same parameters and routing math:
+
+* `apply_moe_dense` — pure GSPMD: a (E, C, d) capacity-buffer einsum that
+  XLA shards from parameter annotations. Simple, used as the
+  paper-faithful baseline and for single-device tests.
+* `apply_moe_ep`  — explicit GShard-style expert parallelism under
+  `jax.shard_map`: per-device routing of a token slice, fixed-capacity
+  all_to_all dispatch to expert shards, local expert einsum, all_to_all
+  combine, all_gather over the model axis. This is the optimized path
+  measured in EXPERIMENTS.md §Perf.
+
+Experts are padded to a multiple of the EP shard count; padded experts
+receive -inf router logits (never routed, zero weight).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import Spec
+
+NEG_INF = -1e30
+
+
+def padded_experts(cfg: ModelConfig, ep: int) -> int:
+    e = cfg.moe.num_experts
+    return ((e + ep - 1) // ep) * ep
+
+
+def moe_spec(cfg: ModelConfig, ep: int):
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    E = padded_experts(cfg, ep)
+    L = cfg.num_layers
+    spec = {
+        "router": Spec((d, E), (None, None)),
+        "wg": Spec((E, d, f), ("experts", "fsdp", None)),
+        "wu": Spec((E, d, f), ("experts", "fsdp", None)),
+        "wd": Spec((E, f, d), ("experts", None, "fsdp"),
+                   scale=1.0 / math.sqrt(2 * L)),
+    }
+    if m.num_shared_experts:
+        fs = m.d_ff_shared
+        spec.update({
+            "shared_wg": Spec((d, fs), ("fsdp", "mlp")),
+            "shared_wu": Spec((d, fs), ("fsdp", "mlp")),
+            "shared_wd": Spec((fs, d), ("mlp", "fsdp"),
+                              scale=1.0 / math.sqrt(2 * L)),
+            "shared_gate": Spec((d, 1), (None, None)),
+        })
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+def _route(cfg: ModelConfig, p, x2d):
+    """x2d: (t, d) -> (weights (t,k), ids (t,k), aux_loss scalar)."""
+    m = cfg.moe
+    E = p["router"].shape[1]
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if E != m.num_experts:   # mask padded experts
+        logits = jnp.where(jnp.arange(E) >= m.num_experts, NEG_INF, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)   # renormalize
+    # Switch-style load-balance auxiliary loss over real experts.
+    one_hot = jax.nn.one_hot(top_ids[:, 0], E, dtype=jnp.float32)
+    frac_tokens = jnp.mean(one_hot, axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(frac_tokens * mean_probs)
+    return top_w, top_ids, aux
+
+
+def _dispatch_slots(ids, E: int, capacity: int):
+    """Rank each (token, k) pair within its expert; drop beyond capacity.
+
+    ids: (t, k) int. Returns (slot (t,k), keep (t,k) bool).
+    """
+    t, k = ids.shape
+    flat = ids.reshape(-1)
+    oneh = jax.nn.one_hot(flat, E, dtype=jnp.int32)          # (t*k, E)
+    ranks = jnp.cumsum(oneh, axis=0) - oneh                  # exclusive
+    slot = jnp.take_along_axis(ranks, flat[:, None], axis=1)[:, 0]
+    keep = slot < capacity
+    return slot.reshape(t, k), keep.reshape(t, k)
+
+
+def _expert_ffn(cfg: ModelConfig, wg, wu, wd, xbuf):
+    """xbuf: (E, C, d) -> (E, C, d). SwiGLU per expert."""
+    dt = xbuf.dtype
+    g = jnp.einsum("ecd,edf->ecf", xbuf, wg.astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xbuf, wu.astype(dt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))
+
+
+def _shared_expert(cfg: ModelConfig, p, x2d):
+    dt = x2d.dtype
+    g = jnp.einsum("td,df->tf", x2d, p["shared_wg"].astype(dt))
+    u = jnp.einsum("td,df->tf", x2d, p["shared_wu"].astype(dt))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tf,fd->td", h, p["shared_wd"].astype(dt))
+    gate = jax.nn.sigmoid(
+        jnp.einsum("td,dg->tg", x2d.astype(jnp.float32),
+                   p["shared_gate"].astype(jnp.float32)))
+    return y * gate.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense (GSPMD-auto) path
+# ---------------------------------------------------------------------------
+def apply_moe_dense(cfg: ModelConfig, p, x, *, capacity_factor: float = 1.25):
+    """x: (B,S,D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    m = cfg.moe
+    E = p["router"].shape[1]
+    x2d = x.reshape(-1, D)
+    t = x2d.shape[0]
+    top_w, top_ids, aux = _route(cfg, p, x2d)
+    capacity = max(1, int(t * m.top_k / m.num_experts * capacity_factor))
+    slot, keep = _dispatch_slots(top_ids, E, capacity)
+
+    # scatter tokens into the (E, C, d) buffer
+    xbuf = jnp.zeros((E, capacity, D), x.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(t)[:, None], top_ids.shape)
+    safe_slot = jnp.where(keep, slot, capacity - 1)
+    upd = jnp.where(keep[..., None], x2d[tok_idx], 0).reshape(-1, D)
+    xbuf = xbuf.at[top_ids.reshape(-1), safe_slot.reshape(-1)].add(
+        upd, mode="drop")
+
+    ybuf = _expert_ffn(cfg, p["wg"], p["wu"], p["wd"], xbuf)
+
+    # gather back, weight, and sum over k
+    y_pairs = ybuf[top_ids.reshape(-1), safe_slot.reshape(-1)].reshape(t, m.top_k, D)
+    y_pairs = jnp.where(keep[..., None], y_pairs, 0)
+    y = jnp.sum(y_pairs * top_w[..., None].astype(x.dtype), axis=1)
+    if m.num_shared_experts:
+        y = y + _shared_expert(cfg, p, x2d)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Explicit expert-parallel path (shard_map + all_to_all)
+# ---------------------------------------------------------------------------
+def apply_moe_ep(cfg: ModelConfig, p, x, mesh, *, capacity_factor: float = 1.25,
+                 batch_axes=("data",), fsdp_axis: str = "data",
+                 model_axis: str = "model"):
+    """GShard-style EP. x: (B,S,D) sharded (batch over `batch_axes`,
+    replicated over the model axis). Experts sharded over the model axis;
+    expert weights additionally FSDP-sharded over `fsdp_axis` (gathered
+    inside). Shared experts (qwen2) run outside the shard_map under plain
+    GSPMD tensor parallelism.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    B, S, D = x.shape
+    M = mesh.shape[model_axis]
+    E = p["wg"].shape[0]
+    E_loc = E // M
+
+    def local_moe(x_loc, router_w, wg, wu, wd):
+        # x_loc: (B_loc, S, D) replicated over the model axis
+        midx = jax.lax.axis_index(model_axis)
+        t_all = x_loc.shape[0] * x_loc.shape[1]
+        x2d = x_loc.reshape(t_all, D)
+        # pad the token axis so every model shard owns an equal slice
+        t_m = max(1, -(-t_all // M))
+        pad = t_m * M - t_all
+        if pad:
+            x2d = jnp.concatenate([x2d, jnp.zeros((pad, D), x2d.dtype)], 0)
+        xm = jax.lax.dynamic_slice_in_dim(x2d, midx * t_m, t_m, 0)
+        tok_valid = midx * t_m + jnp.arange(t_m) < t_all
+
+        top_w, top_ids, aux = _route(cfg, {"router": router_w}, xm)
+        # capacity per (expert, source shard)
+        C = max(1, int(math.ceil(t_m * m.top_k / E * capacity_factor)))
+        slot, keep = _dispatch_slots(top_ids, E, C)
+        keep = keep & tok_valid[:, None]
+
+        # build send buffer (E, C, D), grouped by destination shard
+        sbuf = jnp.zeros((E, C, D), x_loc.dtype)
+        safe_slot = jnp.where(keep, slot, C - 1)
+        upd = jnp.where(keep[..., None], xm[jnp.broadcast_to(
+            jnp.arange(t_m)[:, None], top_ids.shape)], 0).reshape(-1, D)
+        sbuf = sbuf.at[top_ids.reshape(-1), safe_slot.reshape(-1)].add(
+            upd, mode="drop")
+        sbuf = sbuf.reshape(M, E_loc, C, D)
+        rbuf = jax.lax.all_to_all(sbuf, model_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # rbuf: (M, E_loc, C, D) — rows destined to my local experts
+        rbuf = rbuf.transpose(1, 0, 2, 3).reshape(E_loc, M * C, D)
+
+        # FSDP gather of expert weights
+        if fsdp_axis:
+            wg = jax.lax.all_gather(wg, fsdp_axis, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, fsdp_axis, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, fsdp_axis, axis=2, tiled=True)
+        ybuf = _expert_ffn(cfg, wg, wu, wd, rbuf)
+
+        ybuf = ybuf.reshape(E_loc, M, C, D).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(ybuf, model_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        back = back.reshape(E, C, D)
+
+        y_pairs = back[top_ids.reshape(-1), safe_slot.reshape(-1)]
+        y_pairs = jnp.where(keep.reshape(-1)[:, None], y_pairs, 0)
+        y_pairs = y_pairs.reshape(t_m, m.top_k, D)
+        ym = jnp.sum(y_pairs * top_w[..., None].astype(x_loc.dtype), axis=1)
+
+        y = jax.lax.all_gather(ym, model_axis, axis=0, tiled=True)
+        y = y[:t_all].reshape(x_loc.shape)
+        aux = jax.lax.pmean(aux, model_axis)
+        for ax in batch_axes:
+            aux = jax.lax.pmean(aux, ax)
+        return y, aux
+
+    batch_spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
+                   None, None)
+    fn = jax.shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(batch_spec,
+                  P(None, None),                         # router replicated
+                  P(model_axis, fsdp_axis, None),        # wg
+                  P(model_axis, fsdp_axis, None),        # wu
+                  P(model_axis, None, fsdp_axis)),       # wd
+        out_specs=(batch_spec, P()),
+        check_vma=False)
+    y, aux = fn(x, p["router"], p["wg"], p["wu"], p["wd"])
+
+    if m.num_shared_experts:
+        y = y + _shared_expert(cfg, p, x.reshape(-1, D)).reshape(B, S, D)
+    return y, aux

@@ -1,0 +1,107 @@
+"""Parameter spec trees.
+
+A model is described by a nested dict of `Spec` leaves. From the spec tree
+we can:
+  * materialize real parameters (`init_params`) for CPU tests/examples;
+  * produce `jax.ShapeDtypeStruct` stand-ins with `NamedSharding`
+    (`abstract_params`) for the multi-pod dry-run — no allocation;
+  * extract the sharding tree (`shardings`) for `jax.jit` in_shardings.
+
+Logical axis names on each Spec dim are resolved to mesh axes through a
+rules dict (see repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (or None)
+    init: str = "normal"              # normal | zeros | ones | embed
+    scale: float = 1.0                # fan-in style scale multiplier
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def tree_map_specs(fn, spec_tree):
+    return jax.tree.map(fn, spec_tree, is_leaf=is_spec)
+
+
+def _init_leaf(spec: Spec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "neg_inf":
+        return jnp.full(spec.shape, -jnp.inf, dtype)
+    if spec.init == "normal":
+        # truncated-normal, fan-in scaled on the last contracting dim
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else math.prod(spec.shape[:-1])
+        std = spec.scale / max(1.0, math.sqrt(fan_in))
+        return (jax.random.truncated_normal(key, -3.0, 3.0, spec.shape, jnp.float32)
+                * std).astype(dtype)
+    if spec.init == "embed":
+        std = spec.scale * 0.02
+        return (jax.random.truncated_normal(key, -3.0, 3.0, spec.shape, jnp.float32)
+                * std).astype(dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(spec_tree, key, dtype=jnp.float32):
+    """Materialize real parameters. Deterministic given `key`."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], rules: dict):
+    """Map logical axis names -> PartitionSpec entries via `rules`."""
+    from jax.sharding import PartitionSpec as P
+    entries = []
+    for name in axes:
+        if name is None:
+            entries.append(None)
+        else:
+            entries.append(rules.get(name))
+    return P(*entries)
+
+
+def shardings(spec_tree, mesh, rules):
+    """NamedSharding tree matching the spec tree."""
+    from jax.sharding import NamedSharding
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, logical_to_pspec(s.axes, rules)),
+        spec_tree)
+
+
+def abstract_params(spec_tree, mesh, rules, dtype=jnp.float32):
+    """ShapeDtypeStruct tree with shardings — dry-run stand-ins."""
+    from jax.sharding import NamedSharding
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype,
+            sharding=NamedSharding(mesh, logical_to_pspec(s.axes, rules))),
+        spec_tree)
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(math.prod(s.shape) for s in leaves))
+
+
+def param_bytes(spec_tree, bytes_per_el=4) -> int:
+    return param_count(spec_tree) * bytes_per_el

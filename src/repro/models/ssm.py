@@ -1,0 +1,229 @@
+"""Mamba-2-style selective state-space (SSD) heads.
+
+Used by hymba's parallel SSM path. Implements the chunkwise-parallel SSD
+form (matmul-structured, TPU/MXU friendly) with a step function for
+decode. `repro.kernels.ssd_scan` provides the Pallas version of the inner
+chunk computation; `repro.kernels.ref` holds the sequential oracle.
+
+Shapes: x (B, S, H, P) heads; B_mat/C_mat (B, S, N) shared across heads
+(single group); dt (B, S, H); A (H,) negative scalars.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import Spec
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int = 64,
+                init_state=None, return_state: bool = False):
+    """Chunkwise SSD scan.
+
+    x: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,) negative,
+    Bm, Cm: (B,S,N), D: (H,) skip. Returns y (B,S,H,P) [, state (B,H,P,N)].
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zx = jnp.zeros((Bsz, pad, H, P), x.dtype)
+        x = jnp.concatenate([x, zx], 1)
+        dt = jnp.concatenate([dt, jnp.zeros((Bsz, pad, H), dt.dtype)], 1)
+        Bm = jnp.concatenate([Bm, jnp.zeros((Bsz, pad, N), Bm.dtype)], 1)
+        Cm = jnp.concatenate([Cm, jnp.zeros((Bsz, pad, N), Cm.dtype)], 1)
+    Sp = x.shape[1]
+    n = Sp // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, n, Q, H, P)
+    dtc = dt.reshape(Bsz, n, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, n, Q, N)
+    Cc = Cm.reshape(Bsz, n, Q, N)
+
+    dA = dtc * A.astype(f32)[None, None, None, :]          # (B,n,Q,H) log-decay
+    cum = jnp.cumsum(dA, axis=2)                           # inclusive
+    seg_end = cum[:, :, -1, :]                             # (B,n,H)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    # L[i,j] = exp(cum_i - cum_j) * dt_j  for i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,n,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    Lmat = Lmat * dtc[:, :, None, :, :]                    # decay * dt_j
+    CB = jnp.einsum("bcis,bcjs->bcij",
+                    Cc.astype(f32), Bc.astype(f32))        # (B,n,Q,Q)
+    W = CB[..., None] * Lmat                               # (B,n,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xc.astype(f32))
+
+    # --- chunk end-states ---
+    # state_n = sum_j exp(seg_end - cum_j) dt_j * B_j (outer) x_j
+    wj = jnp.exp(seg_end[:, :, None, :] - cum) * dtc       # (B,n,Q,H)
+    states = jnp.einsum("bcjh,bcjs,bcjhp->bchps",
+                        wj, Bc.astype(f32), xc.astype(f32))  # (B,n,H,P,N)
+
+    # --- inter-chunk recurrence over n chunks ---
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), f32)
+    else:
+        init_state = init_state.astype(f32)
+
+    def step(st, inp):
+        seg_e, new_state = inp                             # (B,H), (B,H,P,N)
+        out_prev = st                                      # state before chunk
+        st = jnp.exp(seg_e)[:, :, None, None] * st + new_state
+        return st, out_prev
+
+    final_st, prev_states = jax.lax.scan(
+        step, init_state,
+        (seg_end.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,n,H,P,N)
+
+    # --- inter-chunk contribution ---
+    # y_inter_i = exp(cum_i) * C_i . prev_state
+    y_inter = jnp.einsum("bcis,bchps->bcihp",
+                         Cc.astype(f32), prev_states) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    y = y[:, :S].astype(x.dtype)
+    if return_state:
+        return y, final_st
+    return y
+
+
+def ssd_step(x, dt, A, Bm, Cm, D, state):
+    """Single decode step. x: (B,H,P), dt: (B,H), Bm/Cm: (B,N),
+    state: (B,H,P,N) -> (y (B,H,P), new_state)."""
+    f32 = jnp.float32
+    dA = (dt.astype(f32) * A.astype(f32)[None, :])         # (B,H)
+    decay = jnp.exp(dA)[:, :, None, None]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(f32), Bm.astype(f32),
+                     x.astype(f32))
+    new_state = decay * state.astype(f32) + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(f32), new_state)
+    y = y + x.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba head-group layer (hymba SSM path)
+# ---------------------------------------------------------------------------
+def mamba_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    H = max(1, di // 64)          # ssm heads of dim 64
+    N = s.state_dim
+    L = cfg.num_layers
+    return {
+        "w_in": Spec((d, 2 * di), ("fsdp", "mlp")),        # x path + gate
+        "conv": Spec((s.conv_width, di), (None, "mlp"), "normal", 1.0),
+        "w_bc": Spec((di, 2 * N), ("mlp", None)),
+        "w_dt": Spec((di, H), ("mlp", None)),
+        "dt_bias": Spec((H,), (None,), "zeros"),
+        "A_log": Spec((H,), (None,), "zeros"),             # A = -exp(A_log)
+        "D": Spec((H,), (None,), "ones"),
+        "w_out": Spec((di, d), ("mlp", "fsdp"),
+                      scale=1.0 / math.sqrt(2 * L)),
+        "out_norm": Spec((di,), (None,), "ones"),
+    }
+
+
+def _causal_conv(x, w, cache=None):
+    """x: (B,S,di); w: (W,di) depthwise. Returns (y, new_cache (B,W-1,di))."""
+    W = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    new_cache = xp[:, -(W - 1):] if W > 1 else None
+    # depthwise conv as W stacked shifts (W is tiny, e.g. 4)
+    outs = 0
+    S = x.shape[1]
+    for i in range(W):
+        outs = outs + xp[:, i:i + S, :] * w[i].astype(x.dtype)
+    return outs, new_cache
+
+
+def apply_mamba(cfg: ModelConfig, p, x, *, chunk: int = 64,
+                return_cache: bool = False):
+    """Full-sequence mamba head-group. x: (B,S,D) -> (B,S,D)
+    [, decode cache {"conv","state"}]."""
+    B, S, D = x.shape
+    s = cfg.ssm
+    di = s.expand * D
+    dt_ = x.dtype
+    u = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt_))
+    xin_raw, z = jnp.split(u, 2, axis=-1)
+    xin, _ = _causal_conv(xin_raw, p["conv"])
+    xin = jax.nn.silu(xin)
+    H = p["w_dt"].shape[1]
+    P = di // H
+    N = s.state_dim
+    bc = jnp.einsum("bse,en->bsn", xin, p["w_bc"].astype(dt_))
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bse,eh->bsh", xin, p["w_dt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, S, H, P)
+    if return_cache:
+        y, state = ssd_chunked(xh, dt, A, Bm, Cm, p["D"], chunk=chunk,
+                               return_state=True)
+    else:
+        y = ssd_chunked(xh, dt, A, Bm, Cm, p["D"], chunk=chunk)
+    y = y.reshape(B, S, di)
+    # RMS out-norm then gate
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf ** 2, -1, keepdims=True) + 1e-6)
+         * p["out_norm"].astype(jnp.float32)).astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    if return_cache:
+        W = s.conv_width
+        cache = {"conv": xin_raw[:, -(W - 1):], "state": state}
+        return out, cache
+    return out
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H = max(1, di // 64)
+    P = di // H
+    return {"conv": jnp.zeros((batch, s.conv_width - 1, di), dtype),
+            "state": jnp.zeros((batch, H, P, s.state_dim), jnp.float32)}
+
+
+def apply_mamba_step(cfg: ModelConfig, p, x, cache):
+    """Decode step. x: (B,1,D) -> (y (B,1,D), new_cache)."""
+    B, _, D = x.shape
+    s = cfg.ssm
+    di = s.expand * D
+    dt_ = x.dtype
+    u = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt_))
+    xin, z = jnp.split(u, 2, axis=-1)
+    xin, new_conv = _causal_conv(xin, p["conv"], cache=cache["conv"])
+    xin = jax.nn.silu(xin)[:, 0]                            # (B,di)
+    H = p["w_dt"].shape[1]
+    P = di // H
+    bc = jnp.einsum("be,en->bn", xin, p["w_bc"].astype(dt_))
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("be,eh->bh", xin, p["w_dt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_state = ssd_step(xin.reshape(B, H, P), dt, A, Bm, Cm, p["D"],
+                            cache["state"])
+    y = y.reshape(B, 1, di)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf ** 2, -1, keepdims=True) + 1e-6)
+         * p["out_norm"].astype(jnp.float32)).astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    return out, {"conv": new_conv, "state": new_state}

@@ -1,0 +1,518 @@
+"""Model assembly: layer plans, scan-over-layers segments, forward /
+prefill / decode for every architecture family.
+
+A model is a sequence of *segments*: runs of homogeneous layers scanned
+together (`jax.lax.scan` over stacked parameters), so HLO size is O(1) in
+depth. Heterogeneous stacks (hymba's 3 global-attention layers, xlstm's
+mLSTM/sLSTM alternation) become short segment lists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (DENSE, ENCODER, HYBRID, MOE, SSM, VLM,
+                                ModelConfig)
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.param import Spec, tree_map_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str          # "block" | "mlstm" | "slstm"
+    count: int
+    window: int = 0    # 0 = full attention (block kind only)
+
+
+def layer_plan(cfg: ModelConfig) -> List[Segment]:
+    if cfg.family == SSM:
+        e = cfg.ssm.slstm_every
+        if e > 0 and cfg.num_layers % e == 0:
+            # repeating unit: (e-1) mLSTM blocks then 1 sLSTM block
+            unit = [Segment("mlstm", e - 1)] if e > 1 else []
+            unit.append(Segment("slstm", 1))
+            return unit * (cfg.num_layers // e)
+        return [Segment("mlstm", cfg.num_layers)]
+    # dense / moe / vlm / encoder / hybrid: group consecutive layers with
+    # the same attention window
+    windows = []
+    for i in range(cfg.num_layers):
+        if cfg.sliding_window and i not in cfg.global_attn_layers:
+            windows.append(cfg.sliding_window)
+        else:
+            windows.append(0)
+    segs: List[Segment] = []
+    for w in windows:
+        if segs and segs[-1].window == w:
+            segs[-1] = Segment("block", segs[-1].count + 1, w)
+        else:
+            segs.append(Segment("block", 1, w))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+def _stack_spec(spec_tree, count: int):
+    return tree_map_specs(
+        lambda s: Spec((count,) + s.shape, ("layers",) + s.axes,
+                       s.init, s.scale),
+        spec_tree)
+
+
+def _block_spec(cfg: ModelConfig, ep: int, tp: int = 1):
+    spec = {
+        "ln1": L.norm_spec(cfg),
+        "attn": L.attention_spec(cfg, tp),
+        "ln2": L.norm_spec(cfg),
+    }
+    if cfg.family == MOE:
+        spec["moe"] = moe_lib.moe_spec(cfg, ep)
+    else:
+        spec["mlp"] = L.mlp_spec(cfg)
+    if cfg.family == HYBRID:
+        spec["mamba"] = ssm_lib.mamba_spec(cfg)
+        spec["mix_a"] = Spec((cfg.d_model,), (None,), "ones")
+        spec["mix_s"] = Spec((cfg.d_model,), (None,), "ones")
+    return spec
+
+
+def build_spec(cfg: ModelConfig, *, ep: int = 1, tp: int = 1):
+    """Full parameter spec tree for an architecture. `ep` pads MoE expert
+    counts to the EP divisor; `tp` pads GQA head groups to the TP divisor
+    (see layers.padded_heads)."""
+    spec = {"embed": L.embedding_spec(cfg),
+            "final_norm": L.norm_spec(cfg)}
+    if cfg.meta_tokens:
+        spec["meta"] = Spec((cfg.meta_tokens, cfg.d_model), (None, "fsdp"),
+                            "embed")
+    segs = []
+    for seg in layer_plan(cfg):
+        if seg.kind == "block":
+            one = _block_spec(cfg, ep, tp)
+        elif seg.kind == "mlstm":
+            one = xlstm_lib.mlstm_block_spec(cfg)
+        elif seg.kind == "slstm":
+            one = xlstm_lib.slstm_block_spec(cfg)
+        else:
+            raise ValueError(seg.kind)
+        segs.append(_stack_spec(one, seg.count))
+    spec["segments"] = segs
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+def cache_spec(cfg: ModelConfig, batch: int, cap: int, dtype_name: str = "bfloat16"):
+    """Spec tree for the decode cache at static capacity `cap` (the
+    absolute position space includes meta tokens; `cap` should already
+    include them for global layers)."""
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    meta = cfg.meta_tokens
+    segs = []
+    for seg in layer_plan(cfg):
+        n = seg.count
+        if seg.kind == "block":
+            w = seg.window
+            kv_cap = cap if w == 0 else min(w, cap)
+            c = {"k": Spec((n, batch, kv_cap, K, hd),
+                           ("layers", "batch", None, "kv_heads", None), "zeros"),
+                 "v": Spec((n, batch, kv_cap, K, hd),
+                           ("layers", "batch", None, "kv_heads", None), "zeros")}
+            if w > 0 and meta:
+                c["mk"] = Spec((n, batch, meta, K, hd),
+                               ("layers", "batch", None, "kv_heads", None), "zeros")
+                c["mv"] = Spec((n, batch, meta, K, hd),
+                               ("layers", "batch", None, "kv_heads", None), "zeros")
+            if cfg.family == HYBRID:
+                di = cfg.ssm.expand * cfg.d_model
+                Hs = max(1, di // 64)
+                P = di // Hs
+                c["mamba"] = {
+                    "conv": Spec((n, batch, cfg.ssm.conv_width - 1, di),
+                                 ("layers", "batch", None, "mlp"), "zeros"),
+                    "state": Spec((n, batch, Hs, P, cfg.ssm.state_dim),
+                                  ("layers", "batch", None, "mlp", None), "zeros"),
+                }
+            segs.append(c)
+        elif seg.kind == "mlstm":
+            di = cfg.ssm.expand * cfg.d_model
+            H = cfg.num_heads
+            P = di // H
+            segs.append({
+                "C": Spec((n, batch, H, P, P), ("layers", "batch", "heads", None, None), "zeros"),
+                "n": Spec((n, batch, H, P), ("layers", "batch", "heads", None), "zeros"),
+                "m": Spec((n, batch, H), ("layers", "batch", "heads"), "neg_inf"),
+                "conv": Spec((n, batch, cfg.ssm.conv_width - 1, di),
+                             ("layers", "batch", None, "mlp"), "zeros"),
+            })
+        elif seg.kind == "slstm":
+            d = cfg.d_model
+            H = cfg.num_heads
+            P = d // H
+            segs.append({
+                "h": Spec((n, batch, H, P), ("layers", "batch", "heads", None), "zeros"),
+                "c": Spec((n, batch, H, P), ("layers", "batch", "heads", None), "zeros"),
+                "n": Spec((n, batch, H, P), ("layers", "batch", "heads", None), "zeros"),
+                "m": Spec((n, batch, H, P), ("layers", "batch", "heads", None), "neg_inf"),
+                "conv": Spec((n, batch, cfg.ssm.conv_width - 1, d),
+                             ("layers", "batch", None, None), "zeros"),
+            })
+    return {"segments": segs}
+
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+class ShardCtx:
+    """Applies with_sharding_constraint from logical axis names; a None
+    mesh makes it a no-op (single-device tests)."""
+
+    def __init__(self, mesh=None, rules=None):
+        self.mesh = mesh
+        self.rules = rules or {}
+
+    def __call__(self, x, *axes):
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding
+        from repro.models.param import logical_to_pspec
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, logical_to_pspec(axes, self.rules)))
+
+
+NULL_CTX = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# Block forward / decode
+# ---------------------------------------------------------------------------
+def _block_forward(cfg: ModelConfig, p, x, positions, ctx, *, window: int,
+                   moe_impl: str, mesh, capacity_factor: float,
+                   collect_cache: bool, q_chunk: int = 1024):
+    h = L.apply_norm(cfg, p["ln1"], x)
+    if window > 0:
+        attn_out, kv = L.attention_windowed(cfg, p["attn"], h, positions,
+                                            window=window,
+                                            meta=cfg.meta_tokens)
+    else:
+        attn_out, kv = L.attention_full(cfg, p["attn"], h, positions,
+                                        causal=cfg.causal, q_chunk=q_chunk)
+    attn_out = ctx(attn_out, "batch", None, None)
+
+    mamba_cache = None
+    if cfg.family == HYBRID:
+        if collect_cache:
+            ssm_out, mamba_cache = ssm_lib.apply_mamba(
+                cfg, p["mamba"], h, return_cache=True)
+        else:
+            ssm_out = ssm_lib.apply_mamba(cfg, p["mamba"], h)
+        na = _rms(attn_out) * p["mix_a"].astype(x.dtype)
+        ns = _rms(ssm_out) * p["mix_s"].astype(x.dtype)
+        x = x + 0.5 * (na + ns)
+    else:
+        x = x + attn_out
+
+    h2 = L.apply_norm(cfg, p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == MOE:
+        if moe_impl == "ep" and mesh is not None:
+            y, aux = moe_lib.apply_moe_ep(
+                cfg, p["moe"], h2, mesh,
+                capacity_factor=capacity_factor,
+                batch_axes=_batch_axes(mesh),
+                fsdp_axis="data" if "data" in mesh.shape else None)
+        else:
+            y, aux = moe_lib.apply_moe_dense(cfg, p["moe"], h2,
+                                             capacity_factor=capacity_factor)
+    else:
+        y = L.apply_mlp(cfg, p["mlp"], h2)
+    x = x + y
+    x = ctx(x, "batch", None, None)
+
+    cache = None
+    if collect_cache:
+        k, v = kv
+        cache = {"k": k, "v": v}
+        if mamba_cache is not None:
+            cache["mamba"] = mamba_cache
+    return x, aux, cache
+
+
+def _rms(x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf ** 2, -1, keepdims=True) + eps)
+            ).astype(x.dtype)
+
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _block_decode(cfg: ModelConfig, p, x, cache, pos, ctx, *, window: int,
+                  moe_impl: str, mesh, capacity_factor: float):
+    h = L.apply_norm(cfg, p["ln1"], x)
+    attn_out, new_attn_cache = L.attention_decode(
+        cfg, p["attn"], h, cache, pos, window=window, meta=cfg.meta_tokens)
+    new_cache = new_attn_cache
+    if cfg.family == HYBRID:
+        ssm_out, new_mamba = ssm_lib.apply_mamba_step(cfg, p["mamba"], h,
+                                                      cache["mamba"])
+        na = _rms(attn_out) * p["mix_a"].astype(x.dtype)
+        ns = _rms(ssm_out) * p["mix_s"].astype(x.dtype)
+        x = x + 0.5 * (na + ns)
+        new_cache = dict(new_cache)
+        new_cache["mamba"] = new_mamba
+    else:
+        x = x + attn_out
+    h2 = L.apply_norm(cfg, p["ln2"], x)
+    if cfg.family == MOE:
+        if moe_impl == "ep" and mesh is not None:
+            y, _ = moe_lib.apply_moe_ep(
+                cfg, p["moe"], h2, mesh, capacity_factor=capacity_factor,
+                batch_axes=_batch_axes(mesh),
+                fsdp_axis="data" if "data" in mesh.shape else None)
+        else:
+            y, _ = moe_lib.apply_moe_dense(cfg, p["moe"], h2,
+                                           capacity_factor=capacity_factor)
+    else:
+        y = L.apply_mlp(cfg, p["mlp"], h2)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Segment runners
+# ---------------------------------------------------------------------------
+def _remat_wrap(body, remat: str):
+    if remat == "none":
+        return body
+    if remat == "dots":
+        return jax.checkpoint(body, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(body)
+
+
+def _segment_forward(cfg, seg: Segment, params, x, positions, ctx, *,
+                     moe_impl, mesh, capacity_factor, remat, collect_cache,
+                     ssm_impl: str = "gspmd"):
+    if seg.kind == "block":
+        def body(carry, lp):
+            xc, aux = carry
+            xn, aux_l, cache_l = _block_forward(
+                cfg, lp, xc, positions, ctx, window=seg.window,
+                moe_impl=moe_impl, mesh=mesh,
+                capacity_factor=capacity_factor, collect_cache=collect_cache)
+            return (ctx(xn, "batch", "seq", None), aux + aux_l), cache_l
+    elif seg.kind == "mlstm":
+        if ssm_impl == "seqpar" and mesh is not None:
+            def body(carry, lp):
+                xc, aux = carry
+                xn = xlstm_lib.apply_mlstm_block_seqpar(
+                    cfg, lp, xc, mesh, batch_axes=_batch_axes(mesh))
+                return (xn, aux), None
+        else:
+            def body(carry, lp):
+                xc, aux = carry
+                xn, _ = xlstm_lib.apply_mlstm_block(cfg, lp, xc)
+                return (ctx(xn, "batch", "seq", None), aux), None
+    elif seg.kind == "slstm":
+        def body(carry, lp):
+            xc, aux = carry
+            xn, _ = xlstm_lib.apply_slstm_block(cfg, lp, xc)
+            return (ctx(xn, "batch", "seq", None), aux), None
+    else:
+        raise ValueError(seg.kind)
+
+    (x, aux), caches = jax.lax.scan(_remat_wrap(body, remat),
+                                    (x, jnp.zeros((), jnp.float32)), params)
+    return x, aux, caches
+
+
+def _segment_decode(cfg, seg: Segment, params, caches, x, pos, ctx, *,
+                    moe_impl, mesh, capacity_factor):
+    if seg.kind == "block":
+        def body(xc, pc):
+            lp, cache_l = pc
+            xn, new_c = _block_decode(cfg, lp, xc, cache_l, pos, ctx,
+                                      window=seg.window, moe_impl=moe_impl,
+                                      mesh=mesh,
+                                      capacity_factor=capacity_factor)
+            return xn, new_c
+    elif seg.kind == "mlstm":
+        def body(xc, pc):
+            lp, cache_l = pc
+            xn, new_c = xlstm_lib.apply_mlstm_block(cfg, lp, xc, cache=cache_l)
+            return xn, new_c
+    elif seg.kind == "slstm":
+        def body(xc, pc):
+            lp, cache_l = pc
+            xn, new_c = xlstm_lib.apply_slstm_block(cfg, lp, xc, cache=cache_l)
+            return xn, new_c
+    else:
+        raise ValueError(seg.kind)
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Public model functions
+# ---------------------------------------------------------------------------
+def forward(cfg: ModelConfig, params, inputs, *, ctx: ShardCtx = NULL_CTX,
+            moe_impl: str = "dense", mesh=None, capacity_factor: float = 1.25,
+            remat: str = "none", compute_dtype=jnp.bfloat16,
+            collect_cache: bool = False, ssm_impl: str = "gspmd"):
+    """Full-sequence forward.
+
+    inputs: int tokens (B,S) or float embeds (B,S,D) when
+    cfg.embedding_frontend. Returns (logits (B,S,V), aux, caches|None).
+    Meta tokens are prepended internally and stripped from logits.
+    """
+    if cfg.embedding_frontend:
+        x = inputs.astype(compute_dtype)
+    else:
+        x = L.embed_tokens(params["embed"], inputs, compute_dtype)
+    B = x.shape[0]
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(params["meta"].astype(compute_dtype),
+                                (B, cfg.meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = ctx(x, "batch", "seq", None)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    for seg, segp in zip(layer_plan(cfg), params["segments"]):
+        x, aux, cache_s = _segment_forward(
+            cfg, seg, segp, x, positions, ctx, moe_impl=moe_impl, mesh=mesh,
+            capacity_factor=capacity_factor, remat=remat,
+            collect_cache=collect_cache, ssm_impl=ssm_impl)
+        aux_total = aux_total + aux
+        caches.append(cache_s)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if cfg.meta_tokens:
+        x = x[:, cfg.meta_tokens:]
+    logits = L.unembed(cfg, params["embed"], x)
+    logits = ctx(logits, "batch", None, "vocab")
+    return logits, aux_total, (caches if collect_cache else None)
+
+
+def prefill(cfg: ModelConfig, params, inputs, cap: int, *,
+            ctx: ShardCtx = NULL_CTX, moe_impl: str = "dense", mesh=None,
+            capacity_factor: float = 1.25, compute_dtype=jnp.bfloat16,
+            cache_dtype=jnp.bfloat16, ssm_impl: str = "gspmd"):
+    """Run the full prompt, build a decode cache with static capacity
+    `cap` (absolute positions; includes meta tokens for global layers).
+    Returns (last_logits (B,V), cache_tree, next_pos scalar)."""
+    if cfg.family in (SSM,):
+        return _prefill_recurrent(cfg, params, inputs, ctx=ctx,
+                                  compute_dtype=compute_dtype, mesh=mesh,
+                                  ssm_impl=ssm_impl)
+    logits, _, kv_caches = forward(
+        cfg, params, inputs, ctx=ctx, moe_impl=moe_impl, mesh=mesh,
+        capacity_factor=capacity_factor, compute_dtype=compute_dtype,
+        collect_cache=True)
+    B = logits.shape[0]
+    meta = cfg.meta_tokens
+    S_in = inputs.shape[1]
+    S_tot = S_in + meta
+    segs = []
+    for si, (seg, kv) in enumerate(zip(layer_plan(cfg), kv_caches)):
+        k, v = kv["k"], kv["v"]             # (n, B, S_tot, K, hd)
+        w = seg.window
+        if w == 0:
+            padlen = cap - S_tot
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, max(0, padlen)), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, max(0, padlen)), (0, 0), (0, 0)))
+            c = {"k": k[:, :, :cap].astype(cache_dtype),
+                 "v": v[:, :, :cap].astype(cache_dtype)}
+        else:
+            c = _ring_from_full(k, v, w, meta, S_tot, cache_dtype)
+        if cfg.family == HYBRID:
+            c["mamba"] = kv["mamba"]
+        segs.append(c)
+    return logits[:, -1], {"segments": segs}, S_tot
+
+
+def _ring_from_full(k, v, w, meta, S_tot, cache_dtype):
+    """Convert full (n,B,S,K,hd) kv into ring buffer of width w + meta
+    cache, consistent with attention_decode's slot convention
+    (slot = abs_pos % w)."""
+    idx = jnp.arange(w)
+    p_last = S_tot - 1
+    # stored position for slot s: last value <= p_last congruent to s mod w
+    stored = p_last - jnp.mod(p_last - idx, w)
+    stored = jnp.clip(stored, 0, S_tot - 1)
+    rk = jnp.take(k, stored, axis=2).astype(cache_dtype)
+    rv = jnp.take(v, stored, axis=2).astype(cache_dtype)
+    c = {"k": rk, "v": rv}
+    if meta:
+        c["mk"] = k[:, :, :meta].astype(cache_dtype)
+        c["mv"] = v[:, :, :meta].astype(cache_dtype)
+    return c
+
+
+def _prefill_recurrent(cfg, params, inputs, *, ctx, compute_dtype,
+                       mesh=None, ssm_impl: str = "gspmd"):
+    """xLSTM prefill: run forward once per segment capturing final
+    recurrent states. ssm_impl="seqpar" runs mLSTM segments sequence-
+    parallel over the model axis (shard_map; see xlstm.py) — GSPMD
+    cannot shard the chunk recurrence itself."""
+    x = L.embed_tokens(params["embed"], inputs, compute_dtype)
+    B, S, D = x.shape
+    segs_cache = []
+    seqpar = ssm_impl == "seqpar" and mesh is not None
+    for seg, segp in zip(layer_plan(cfg), params["segments"]):
+        if seg.kind == "mlstm":
+            if seqpar:
+                def body(xc, lp):
+                    return xlstm_lib.apply_mlstm_block_seqpar(
+                        cfg, lp, xc, mesh, batch_axes=_batch_axes(mesh),
+                        want_state=True)
+            else:
+                def body(xc, lp):
+                    from repro.models.xlstm import mlstm_block_states
+                    xn, st = mlstm_block_states(cfg, lp, xc)
+                    return xn, st
+        else:
+            def body(xc, lp):
+                from repro.models.xlstm import slstm_block_states
+                xn, st = slstm_block_states(cfg, lp, xc)
+                return xn, st
+        x, seg_states = jax.lax.scan(body, x, segp)
+        segs_cache.append(seg_states)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits[:, -1], {"segments": segs_cache}, S
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, pos, *,
+                ctx: ShardCtx = NULL_CTX, moe_impl: str = "dense", mesh=None,
+                capacity_factor: float = 1.25, compute_dtype=jnp.bfloat16):
+    """One-token decode. token: (B,1) int (or (B,1,D) embeds); pos: scalar
+    absolute position (incl. meta offset). Returns (logits (B,1,V),
+    new_cache)."""
+    if cfg.embedding_frontend:
+        raise ValueError("encoder-only arch has no decode step")
+    x = L.embed_tokens(params["embed"], token, compute_dtype)
+    x = ctx(x, "batch", None, None)
+    new_segs = []
+    for seg, segp, segc in zip(layer_plan(cfg), params["segments"],
+                               cache["segments"]):
+        x, new_c = _segment_decode(cfg, seg, segp, segc, x, pos, ctx,
+                                   moe_impl=moe_impl, mesh=mesh,
+                                   capacity_factor=capacity_factor)
+        new_segs.append(new_c)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    logits = ctx(logits, "batch", None, "vocab")
+    return logits, {"segments": new_segs}

@@ -1,0 +1,587 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly recurrent) per arXiv:2405.04517.
+
+The mLSTM chunkwise form is the TPU-efficient training path (matmul
+structured); `repro.kernels.mlstm_scan` is its Pallas version and
+`repro.kernels.ref.mlstm_recurrent` the sequential oracle.
+
+Stabilization follows the paper: running log-max state m with
+  m_t = max(logsig(f) + m_{t-1}, i_t)
+  C_t = exp(logsig(f) + m_{t-1} - m_t) C_{t-1} + exp(i_t - m_t) v k^T
+  h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import Spec
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+def mlstm_chunked(q, k, v, igate, fgate, *, chunk: int = 64,
+                  init_state=None, return_state: bool = False):
+    """q,k,v: (B,S,H,P); igate,fgate: (B,S,H) raw preactivations.
+    Returns h (B,S,H,P) [, (C (B,H,P,P), n (B,H,P), m (B,H))].
+    """
+    B, S, H, P = q.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        z = jnp.zeros((B, pad, H, P), q.dtype)
+        q = jnp.concatenate([q, z], 1)
+        k = jnp.concatenate([k, z], 1)
+        v = jnp.concatenate([v, z], 1)
+        igate = jnp.concatenate(
+            [igate, jnp.full((B, pad, H), -1e30, igate.dtype)], 1)
+        fgate = jnp.concatenate(
+            [fgate, jnp.zeros((B, pad, H), fgate.dtype)], 1)
+    Sp = q.shape[1]
+    n_ch = Sp // Q
+    scale = 1.0 / math.sqrt(P)
+
+    qc = (q * scale).reshape(B, n_ch, Q, H, P).astype(F32)
+    kc = k.reshape(B, n_ch, Q, H, P).astype(F32)
+    vc = v.reshape(B, n_ch, Q, H, P).astype(F32)
+    ig = igate.reshape(B, n_ch, Q, H).astype(F32)
+    lf = jax.nn.log_sigmoid(fgate.reshape(B, n_ch, Q, H).astype(F32))
+
+    b = jnp.cumsum(lf, axis=2)                       # inclusive in-chunk decay
+    b_last = b[:, :, -1, :]                          # (B,n,H)
+
+    # ---- inter-chunk recurrence (sequential over chunks) ----
+    # carry: C (B,H,P,P), n (B,H,P), m (B,H)
+    if init_state is None:
+        C0 = jnp.zeros((B, H, P, P), F32)
+        n0 = jnp.zeros((B, H, P), F32)
+        m0 = jnp.full((B, H), -jnp.inf, F32)
+    else:
+        C0, n0, m0 = (s.astype(F32) for s in init_state)
+
+    # per-chunk summaries: log-weights of each in-chunk step toward the
+    # chunk end: a_j = i_j + (b_last - b_j)
+    a = ig + (b_last[:, :, None, :] - b)             # (B,n,Q,H)
+    a_max = jnp.max(a, axis=2)                       # (B,n,H)
+
+    def chunk_step(carry, xs):
+        C, nvec, m = carry
+        a_c, amax_c, blast_c, k_c, v_c = xs
+        m_new = jnp.maximum(blast_c + m, amax_c)     # (B,H)
+        w_old = jnp.exp(blast_c + m - m_new)         # decay of old state
+        w_in = jnp.exp(a_c - m_new[:, None, :])      # (B,Q,H)
+        C_new = w_old[:, :, None, None] * C + jnp.einsum(
+            "bqh,bqhp,bqhr->bhpr", w_in, v_c, k_c)
+        n_new = w_old[:, :, None] * nvec + jnp.einsum(
+            "bqh,bqhp->bhp", w_in, k_c)
+        return (C_new, n_new, m_new), (C, nvec, m)
+
+    xs = (a.transpose(1, 0, 2, 3), a_max.transpose(1, 0, 2),
+          b_last.transpose(1, 0, 2), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4))
+    (Cf, nf, mf), (Cprev, nprev, mprev) = jax.lax.scan(
+        chunk_step, (C0, n0, m0), xs)
+    # per-chunk initial states, shape (n, B, ...) -> (B, n, ...)
+    Cprev = Cprev.transpose(1, 0, 2, 3, 4)
+    nprev = nprev.transpose(1, 0, 2, 3)
+    mprev = mprev.transpose(1, 0, 2)
+
+    # ---- intra-chunk + cross term ----
+    # total log-weight for (i >= j): b_i - b_j + i_j; inter weight: b_i + m_prev
+    d_intra = b[:, :, :, None, :] - b[:, :, None, :, :] + ig[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    d_intra = jnp.where(mask[None, None, :, :, None], d_intra, -jnp.inf)
+    d_inter = b + mprev[:, :, None, :]               # (B,n,Q,H)
+    m_loc = jnp.maximum(jnp.max(d_intra, axis=3), d_inter)  # (B,n,Q,H)
+    m_loc = jnp.maximum(m_loc, -1e30)                # avoid -inf - -inf
+
+    w_intra = jnp.exp(d_intra - m_loc[:, :, :, None, :])    # (B,n,Q,Q,H)
+    w_inter = jnp.exp(d_inter - m_loc)                       # (B,n,Q,H)
+
+    qk = jnp.einsum("bnihp,bnjhp->bnijh", qc, kc)            # (B,n,Q,Q,H)
+    h_intra = jnp.einsum("bnijh,bnijh,bnjhp->bnihp", qk, w_intra, vc)
+    h_inter = jnp.einsum("bnihr,bnhpr->bnihp", qc, Cprev) \
+        * w_inter[..., None]
+    h_num = h_intra + h_inter
+    # denominator: n_t . q_t with the same stabilization
+    nq_intra = jnp.einsum("bnijh,bnijh->bnih", qk, w_intra)
+    nq_inter = jnp.einsum("bnihp,bnhp,bnih->bnih", qc, nprev, w_inter)
+    nq = nq_intra + nq_inter
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_loc))
+    h = h_num / denom[..., None]
+
+    h = h.reshape(B, Sp, H, P)[:, :S].astype(q.dtype)
+    if return_state:
+        return h, (Cf, nf, mf)
+    return h
+
+
+def mlstm_state_summary(k, v, igate, fgate, *, chunk: int = 64):
+    """State-only pass: the (C, n, m) state a zero-initialized mLSTM
+    reaches after consuming the sequence, plus the total log-decay
+    b_total. This is the per-shard *summary* of the sequence-parallel
+    formulation (half the math of mlstm_chunked: no intra-chunk output).
+
+    k, v: (B, S, H, P); gates: (B, S, H). Returns ((C, n, m), b_total).
+    """
+    B, S, H, P = k.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        z = jnp.zeros((B, pad, H, P), k.dtype)
+        k = jnp.concatenate([k, z], 1)
+        v = jnp.concatenate([v, z], 1)
+        igate = jnp.concatenate(
+            [igate, jnp.full((B, pad, H), -1e30, igate.dtype)], 1)
+        fgate = jnp.concatenate(
+            [fgate, jnp.zeros((B, pad, H), fgate.dtype)], 1)
+    Sp = k.shape[1]
+    n_ch = Sp // Q
+    kc = k.reshape(B, n_ch, Q, H, P).astype(F32)
+    vc = v.reshape(B, n_ch, Q, H, P).astype(F32)
+    ig = igate.reshape(B, n_ch, Q, H).astype(F32)
+    lf = jax.nn.log_sigmoid(fgate.reshape(B, n_ch, Q, H).astype(F32))
+    b = jnp.cumsum(lf, axis=2)
+    b_last = b[:, :, -1, :]
+    a = ig + (b_last[:, :, None, :] - b)
+    a_max = jnp.max(a, axis=2)
+
+    def chunk_step(carry, xs):
+        C, nvec, m = carry
+        a_c, amax_c, blast_c, k_c, v_c = xs
+        m_new = jnp.maximum(blast_c + m, amax_c)
+        w_old = jnp.exp(blast_c + m - m_new)
+        w_in = jnp.exp(a_c - m_new[:, None, :])
+        C_new = w_old[:, :, None, None] * C + jnp.einsum(
+            "bqh,bqhp,bqhr->bhpr", w_in, v_c, k_c)
+        n_new = w_old[:, :, None] * nvec + jnp.einsum(
+            "bqh,bqhp->bhp", w_in, k_c)
+        return (C_new, n_new, m_new), None
+
+    init = (jnp.zeros((B, H, P, P), F32), jnp.zeros((B, H, P), F32),
+            jnp.full((B, H), -jnp.inf, F32))
+    xs = (a.transpose(1, 0, 2, 3), a_max.transpose(1, 0, 2),
+          b_last.transpose(1, 0, 2), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4))
+    (C, n, m), _ = jax.lax.scan(chunk_step, init, xs)
+    return (C, n, m), jnp.sum(lf, axis=(1, 2))
+
+
+def combine_mlstm_states(s1, b2, s2):
+    """Sequential combine: state s1, then a segment with total decay
+    b2 whose zero-init state is s2. All in the paper's log-max frame."""
+    C1, n1, m1 = s1
+    C2, n2, m2 = s2
+    m_new = jnp.maximum(b2 + m1, m2)
+    m_new = jnp.maximum(m_new, -1e30)            # both -inf: stay finite
+    w1 = jnp.exp(b2 + m1 - m_new)
+    w2 = jnp.exp(m2 - m_new)
+    C = w1[..., None, None] * C1 + w2[..., None, None] * C2
+    n = w1[..., None] * n1 + w2[..., None] * n2
+    return (C, n, m_new)
+
+
+def mlstm_step(q, k, v, igate, fgate, state):
+    """Decode step. q,k,v: (B,H,P); gates (B,H); state (C,n,m)."""
+    C, nvec, m = state
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    qf = q.astype(F32) * scale
+    kf, vf = k.astype(F32), v.astype(F32)
+    lf = jax.nn.log_sigmoid(fgate.astype(F32))
+    ig = igate.astype(F32)
+    m_new = jnp.maximum(lf + m, ig)
+    w_old = jnp.exp(lf + m - m_new)
+    w_in = jnp.exp(ig - m_new)
+    C_new = w_old[..., None, None] * C + w_in[..., None, None] * \
+        jnp.einsum("bhp,bhr->bhpr", vf, kf)
+    n_new = w_old[..., None] * nvec + w_in[..., None] * kf
+    num = jnp.einsum("bhpr,bhr->bhp", C_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n_new, qf)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q.dtype)
+    return h, (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell — strictly recurrent (block-diagonal per head)
+# ---------------------------------------------------------------------------
+def slstm_scan(x_gates, r_weights, H: int, init_state=None):
+    """x_gates: (B,S,4,H,P) input-driven gate preactivations (i,f,z,o);
+    r_weights: (4,H,P,P) recurrent block-diagonal weights.
+    Returns h (B,S,H,P) [, state]."""
+    B, S, _, Hh, P = x_gates.shape
+
+    if init_state is None:
+        h0 = jnp.zeros((B, Hh, P), F32)
+        c0 = jnp.zeros((B, Hh, P), F32)
+        n0 = jnp.zeros((B, Hh, P), F32)
+        m0 = jnp.full((B, Hh, P), -jnp.inf, F32)
+    else:
+        h0, c0, n0, m0 = (s.astype(F32) for s in init_state)
+
+    rw = r_weights.astype(F32)
+
+    def step(carry, g):
+        h, c, n, m = carry
+        rec = jnp.einsum("bhp,ghpr->bghr", h, rw)     # (B,4,H,P)
+        gi = g.astype(F32) + rec
+        it, ft, zt, ot = gi[:, 0], gi[:, 1], gi[:, 2], gi[:, 3]
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(zt)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                                        x_gates.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3), (hf, cf, nf, mf)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel mLSTM block (shard_map over the model axis)
+# ---------------------------------------------------------------------------
+def apply_mlstm_block_seqpar(cfg: ModelConfig, p, x, mesh, *,
+                             seq_axis: str = "model",
+                             batch_axes=("data",), chunk: int = 64,
+                             want_state: bool = False):
+    """TPU-native sequence parallelism for the mLSTM block.
+
+    GSPMD cannot shard the chunkwise scan's sequence dimension (it
+    serializes the inter-chunk recurrence into per-chunk state
+    all-reduces — measured 1 TB/device on prefill_32k, EXPERIMENTS.md
+    §Perf). The explicit formulation: every device runs the block on its
+    LOCAL sequence shard (projections/conv/gates are token-local; the
+    causal conv takes a (W-1)-token halo from the left neighbour via
+    ppermute), computes its (C, n, m, b_total) state summary, all-gathers
+    the summaries (B x H x P x P — megabytes, once per layer), locally
+    prefix-combines the shards before it, and finishes with the
+    intra-chunk pass seeded by that prefix state.
+
+    x: (B, S, D) sharded (batch over batch_axes, seq over seq_axis).
+    Returns (out, final_state|None) — final_state on the LAST shard is
+    the true full-sequence state (used by prefill).
+    """
+    from jax.sharding import PartitionSpec as PS
+    from repro.models.layers import apply_norm
+
+    M = mesh.shape[seq_axis]
+    W = cfg.ssm.conv_width
+    dt_ = x.dtype
+    D = x.shape[-1]
+    di = cfg.ssm.expand * D
+    H = cfg.num_heads
+    P_dim = di // H
+
+    def local_block(x, p):
+        midx = jax.lax.axis_index(seq_axis)
+        xin = apply_norm(cfg, p["norm"], x)
+        u = jnp.einsum("bsd,de->bse", xin, p["w_up"].astype(dt_))
+        ux_raw, z = jnp.split(u, 2, axis=-1)
+        # causal-conv halo: last W-1 tokens of the LEFT neighbour
+        halo = jax.lax.ppermute(
+            ux_raw[:, -(W - 1):],
+            seq_axis, [(i, (i + 1) % M) for i in range(M)])
+        halo = jnp.where(midx == 0, jnp.zeros_like(halo), halo)
+        xp = jnp.concatenate([halo.astype(ux_raw.dtype), ux_raw], axis=1)
+        S_loc = ux_raw.shape[1]
+        conv = 0
+        for i in range(W):
+            conv = conv + xp[:, i:i + S_loc, :] * p["conv"][i].astype(dt_)
+        ux = jax.nn.silu(conv)
+        q = jnp.einsum("bse,ehp->bshp", ux, p["wq"].astype(dt_))
+        k = jnp.einsum("bse,ehp->bshp", ux, p["wk"].astype(dt_))
+        v = jnp.einsum("bse,ehp->bshp", ux, p["wv"].astype(dt_))
+        gates = jnp.einsum("bse,egh->bsgh", ux, p["w_if"].astype(dt_)) \
+            + p["b_if"].astype(dt_)
+        ig, fg = gates[:, :, 0], gates[:, :, 1]
+
+        # shard state summary -> all-gather -> local prefix combine
+        (C, n, m), btot = mlstm_state_summary(k, v, ig, fg, chunk=chunk)
+        Cs = jax.lax.all_gather(C, seq_axis)          # (M, B, H, P, P)
+        ns = jax.lax.all_gather(n, seq_axis)
+        ms = jax.lax.all_gather(m, seq_axis)
+        bs = jax.lax.all_gather(btot, seq_axis)       # (M, B, H)
+
+        B = x.shape[0]
+        init = (jnp.zeros((B, H, P_dim, P_dim), F32),
+                jnp.zeros((B, H, P_dim), F32),
+                jnp.full((B, H), -jnp.inf, F32))
+
+        def comb(carry, xs):
+            idx, (C2, n2, m2, b2) = xs
+            new = combine_mlstm_states(carry, b2, (C2, n2, m2))
+            keep = idx < midx                          # strict prefix
+            out = jax.tree.map(
+                lambda a, b: jnp.where(keep, b, a), carry, new)
+            return out, None
+
+        prefix, _ = jax.lax.scan(
+            comb, init, (jnp.arange(M), (Cs, ns, ms, bs)))
+
+        h = mlstm_chunked(q, k, v, ig, fg, chunk=chunk,
+                          init_state=prefix)
+        h = h.reshape(B, S_loc, di)
+        hf = h.astype(F32)
+        h = (hf * jax.lax.rsqrt(jnp.mean(hf ** 2, -1, keepdims=True)
+                                + 1e-6)
+             * p["gn"].astype(F32)).astype(dt_)
+        h = h * jax.nn.silu(z)
+        out = x + jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(dt_))
+        if not want_state:
+            return out
+        # full-sequence final state = prefix ++ my shard; only the last
+        # shard's value is the true one — broadcast it with psum-mask
+        # (C, n finite; m via pmax to respect a legitimate -inf)
+        mine = combine_mlstm_states(prefix, btot, (C, n, m))
+        is_last = (midx == M - 1).astype(F32)
+        C_fin = jax.lax.psum(mine[0] * is_last, seq_axis)
+        n_fin = jax.lax.psum(mine[1] * is_last, seq_axis)
+        m_fin = jax.lax.pmax(
+            jnp.where(midx == M - 1, mine[2], -jnp.inf), seq_axis)
+        cache = {"C": C_fin, "n": n_fin, "m": m_fin,
+                 "conv": jax.lax.all_gather(  # true last W-1 raw tokens
+                     ux_raw[:, -(W - 1):], seq_axis)[-1]}
+        return out, cache
+
+    bspec = (batch_axes if len(batch_axes) > 1
+             else (batch_axes[0] if batch_axes else None))
+    x_spec = PS(bspec, seq_axis, None)
+    p_specs = jax.tree.map(lambda _: PS(), p)
+    out_specs = ((x_spec, PS(bspec)) if want_state else x_spec)
+    if want_state:
+        out_specs = (x_spec, {"C": PS(bspec), "n": PS(bspec),
+                              "m": PS(bspec), "conv": PS(bspec)})
+    fn = jax.shard_map(local_block, mesh=mesh,
+                       in_specs=(x_spec, p_specs),
+                       out_specs=out_specs, check_vma=False)
+    return fn(x, p)
+
+
+# ---------------------------------------------------------------------------
+# Block specs and applications
+# ---------------------------------------------------------------------------
+def mlstm_block_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    H = cfg.num_heads
+    P = di // H
+    L = cfg.num_layers
+    return {
+        "norm": {"scale": Spec((d,), (None,), "ones"),
+                 "bias": Spec((d,), (None,), "zeros")},
+        "w_up": Spec((d, 2 * di), ("fsdp", "mlp")),
+        "conv": Spec((cfg.ssm.conv_width, di), (None, "mlp")),
+        "wq": Spec((di, H, P), ("mlp", "heads", None)),
+        "wk": Spec((di, H, P), ("mlp", "heads", None)),
+        "wv": Spec((di, H, P), ("mlp", "heads", None)),
+        "w_if": Spec((di, 2, H), ("mlp", None, None)),
+        "b_if": Spec((2, H), (None, None), "zeros"),
+        "gn": Spec((di,), (None,), "ones"),
+        "w_down": Spec((di, d), ("mlp", "fsdp"), scale=1.0 / math.sqrt(2 * L)),
+    }
+
+
+def apply_mlstm_block(cfg: ModelConfig, p, x, *, chunk: int = 64,
+                      cache=None):
+    """Pre-LN mLSTM block. x: (B,S,D). cache: (C,n,m,conv) for decode."""
+    from repro.models.layers import apply_norm
+    from repro.models.ssm import _causal_conv
+
+    B, S, D = x.shape
+    dt = x.dtype
+    di = cfg.ssm.expand * D
+    H = cfg.num_heads
+    P = di // H
+    lncfg = cfg  # layernorm params live in p["norm"]
+    xin = apply_norm(cfg, p["norm"], x)
+    u = jnp.einsum("bsd,de->bse", xin, p["w_up"].astype(dt))
+    ux, z = jnp.split(u, 2, axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    ux, new_conv = _causal_conv(ux, p["conv"], cache=conv_cache)
+    ux = jax.nn.silu(ux)
+    q = jnp.einsum("bse,ehp->bshp", ux, p["wq"].astype(dt))
+    k = jnp.einsum("bse,ehp->bshp", ux, p["wk"].astype(dt))
+    v = jnp.einsum("bse,ehp->bshp", ux, p["wv"].astype(dt))
+    gates = jnp.einsum("bse,egh->bsgh", ux, p["w_if"].astype(dt)) \
+        + p["b_if"].astype(dt)
+    ig, fg = gates[:, :, 0], gates[:, :, 1]
+
+    if cache is None:
+        h = mlstm_chunked(q, k, v, ig, fg, chunk=chunk)
+        new_state = None
+    else:
+        state = (cache["C"], cache["n"], cache["m"])
+        h, new_state = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                  ig[:, 0], fg[:, 0], state)
+        h = h[:, None]
+    h = h.reshape(B, S, di)
+    hf = h.astype(F32)
+    h = (hf * jax.lax.rsqrt(jnp.mean(hf ** 2, -1, keepdims=True) + 1e-6)
+         * p["gn"].astype(F32)).astype(dt)
+    h = h * jax.nn.silu(z)
+    out = x + jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(dt))
+    if cache is None:
+        return out, None
+    return out, {"C": new_state[0], "n": new_state[1], "m": new_state[2],
+                 "conv": new_conv}
+
+
+def mlstm_block_states(cfg: ModelConfig, p, x, *, chunk: int = 64):
+    """Full-sequence mLSTM block that also returns the decode cache."""
+    from repro.models.layers import apply_norm
+    from repro.models.ssm import _causal_conv
+
+    B, S, D = x.shape
+    dt = x.dtype
+    di = cfg.ssm.expand * D
+    H = cfg.num_heads
+    xin = apply_norm(cfg, p["norm"], x)
+    u = jnp.einsum("bsd,de->bse", xin, p["w_up"].astype(dt))
+    ux_raw, z = jnp.split(u, 2, axis=-1)
+    ux, _ = _causal_conv(ux_raw, p["conv"])
+    ux = jax.nn.silu(ux)
+    q = jnp.einsum("bse,ehp->bshp", ux, p["wq"].astype(dt))
+    k = jnp.einsum("bse,ehp->bshp", ux, p["wk"].astype(dt))
+    v = jnp.einsum("bse,ehp->bshp", ux, p["wv"].astype(dt))
+    gates = jnp.einsum("bse,egh->bsgh", ux, p["w_if"].astype(dt)) \
+        + p["b_if"].astype(dt)
+    ig, fg = gates[:, :, 0], gates[:, :, 1]
+    h, (Cf, nf, mf) = mlstm_chunked(q, k, v, ig, fg, chunk=chunk,
+                                    return_state=True)
+    h = h.reshape(B, S, di)
+    hf = h.astype(F32)
+    h = (hf * jax.lax.rsqrt(jnp.mean(hf ** 2, -1, keepdims=True) + 1e-6)
+         * p["gn"].astype(F32)).astype(dt)
+    h = h * jax.nn.silu(z)
+    out = x + jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(dt))
+    W = cfg.ssm.conv_width
+    cache = {"C": Cf, "n": nf, "m": mf, "conv": ux_raw[:, -(W - 1):]}
+    return out, cache
+
+
+def slstm_block_states(cfg: ModelConfig, p, x):
+    """Full-sequence sLSTM block that also returns the decode cache."""
+    from repro.models.layers import apply_norm
+    from repro.models.ssm import _causal_conv
+
+    B, S, D = x.shape
+    dt = x.dtype
+    H = cfg.num_heads
+    xin = apply_norm(cfg, p["norm"], x)
+    xc_raw = xin
+    xc, _ = _causal_conv(xc_raw, p["conv"])
+    xc = jax.nn.silu(xc)
+    g_if = jnp.einsum("bsd,dghp->bsghp", xc, p["w_gates"][:, :2].astype(dt))
+    g_zo = jnp.einsum("bsd,dghp->bsghp", xin, p["w_gates"][:, 2:].astype(dt))
+    gates = jnp.concatenate([g_if, g_zo], axis=2) + p["b_gates"].astype(dt)
+    hs, (hf_, cf, nf, mf) = slstm_scan(gates, p["r_gates"], H)
+    h = hs.reshape(B, S, D).astype(dt)
+    hff = h.astype(F32)
+    h = (hff * jax.lax.rsqrt(jnp.mean(hff ** 2, -1, keepdims=True) + 1e-6)
+         * p["gn"].astype(F32)).astype(dt)
+    x = x + h
+    xin2 = apply_norm(cfg, p["norm"], x)
+    g = jnp.einsum("bsd,df->bsf", xin2, p["ffn"]["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", xin2, p["ffn"]["w_up"].astype(dt))
+    hh = jax.nn.silu(g) * u
+    x = x + jnp.einsum("bsf,fd->bsd", hh, p["ffn"]["w_down"].astype(dt))
+    W = cfg.ssm.conv_width
+    cache = {"h": hf_, "c": cf, "n": nf, "m": mf,
+             "conv": xc_raw[:, -(W - 1):]}
+    return x, cache
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    di = cfg.ssm.expand * cfg.d_model
+    H = cfg.num_heads
+    P = di // H
+    return {"C": jnp.zeros((batch, H, P, P), F32),
+            "n": jnp.zeros((batch, H, P), F32),
+            "m": jnp.full((batch, H), -jnp.inf, F32),
+            "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, di), dtype)}
+
+
+def slstm_block_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    L = cfg.num_layers
+    ff = int(4 * d * 2 / 3)
+    ff = ((ff + 63) // 64) * 64
+    return {
+        "norm": {"scale": Spec((d,), (None,), "ones"),
+                 "bias": Spec((d,), (None,), "zeros")},
+        "conv": Spec((cfg.ssm.conv_width, d), (None, None)),
+        "w_gates": Spec((d, 4, H, P), (None, None, "heads", None)),
+        "r_gates": Spec((4, H, P, P), (None, "heads", None, None),
+                        scale=0.5),
+        "b_gates": Spec((4, H, P), (None, "heads", None), "zeros"),
+        "gn": Spec((d,), (None,), "ones"),
+        "ffn": {"w_gate": Spec((d, ff), ("fsdp", "mlp")),
+                "w_up": Spec((d, ff), ("fsdp", "mlp")),
+                "w_down": Spec((ff, d), ("mlp", "fsdp"),
+                               scale=1.0 / math.sqrt(2 * L))},
+    }
+
+
+def apply_slstm_block(cfg: ModelConfig, p, x, *, cache=None):
+    """Pre-LN sLSTM block + gated FFN. x: (B,S,D)."""
+    from repro.models.layers import apply_norm
+    from repro.models.ssm import _causal_conv
+
+    B, S, D = x.shape
+    dt = x.dtype
+    H = cfg.num_heads
+    P = D // H
+    xin = apply_norm(cfg, p["norm"], x)
+    conv_cache = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv"], cache=conv_cache)
+    xc = jax.nn.silu(xc)
+    # conv feeds i/f gates; raw input feeds z/o (per paper Fig. 10)
+    g_if = jnp.einsum("bsd,dghp->bsghp", xc,
+                      p["w_gates"][:, :2].astype(dt))
+    g_zo = jnp.einsum("bsd,dghp->bsghp", xin, p["w_gates"][:, 2:].astype(dt))
+    gates = jnp.concatenate([g_if, g_zo], axis=2) + p["b_gates"].astype(dt)
+
+    if cache is None:
+        h, _ = slstm_scan(gates, p["r_gates"], H)
+        new_state = None
+    else:
+        state = (cache["h"], cache["c"], cache["n"], cache["m"])
+        hs, new_state = slstm_scan(gates, p["r_gates"], H, init_state=state)
+        h = hs
+    h = h.reshape(B, S, D).astype(dt)
+    hf = h.astype(F32)
+    h = (hf * jax.lax.rsqrt(jnp.mean(hf ** 2, -1, keepdims=True) + 1e-6)
+         * p["gn"].astype(F32)).astype(dt)
+    x = x + h
+    # gated FFN
+    xin2 = apply_norm(cfg, p["norm"], x)
+    g = jnp.einsum("bsd,df->bsf", xin2, p["ffn"]["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", xin2, p["ffn"]["w_up"].astype(dt))
+    hh = jax.nn.silu(g) * u
+    x = x + jnp.einsum("bsf,fd->bsd", hh, p["ffn"]["w_down"].astype(dt))
+    if cache is None:
+        return x, None
+    return x, {"h": new_state[0], "c": new_state[1], "n": new_state[2],
+               "m": new_state[3], "conv": new_conv}
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    return {"h": jnp.zeros((batch, H, P), F32),
+            "c": jnp.zeros((batch, H, P), F32),
+            "n": jnp.zeros((batch, H, P), F32),
+            "m": jnp.full((batch, H, P), -jnp.inf, F32),
+            "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, d), dtype)}

@@ -1,0 +1,56 @@
+"""Serving step factories: prefill (prompt -> cache + first token) and
+decode (one token against a static-capacity cache), both jit-able and
+shardable. Greedy sampling by default.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.models.transformer import NULL_CTX, ShardCtx
+
+
+def make_prefill_step(model: Model, cap: int, *, mesh=None, rules=None,
+                      moe_impl: str = "dense", compute_dtype=jnp.bfloat16,
+                      ssm_impl: str = "gspmd"):
+    ctx = ShardCtx(mesh, rules) if mesh is not None else NULL_CTX
+
+    def prefill_step(params, inputs):
+        last_logits, cache, pos = model.prefill(
+            params, inputs, cap, ctx=ctx, mesh=mesh, moe_impl=moe_impl,
+            compute_dtype=compute_dtype, ssm_impl=ssm_impl)
+        tok = jnp.argmax(last_logits.astype(jnp.float32), axis=-1)
+        return tok, cache, pos
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, *, mesh=None, rules=None,
+                     moe_impl: str = "dense", compute_dtype=jnp.bfloat16):
+    ctx = ShardCtx(mesh, rules) if mesh is not None else NULL_CTX
+
+    def decode_step(params, token, cache, pos):
+        logits, new_cache = model.decode(
+            params, token, cache, pos, ctx=ctx, mesh=mesh,
+            moe_impl=moe_impl, compute_dtype=compute_dtype)
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt[:, None], new_cache
+
+    return decode_step
+
+
+def make_encode_step(model: Model, *, mesh=None, rules=None,
+                     compute_dtype=jnp.bfloat16):
+    """Encoder-only archs: full-sequence forward returning logits."""
+    ctx = ShardCtx(mesh, rules) if mesh is not None else NULL_CTX
+
+    def encode_step(params, inputs):
+        logits, _ = model.apply(params, inputs, ctx=ctx, mesh=mesh,
+                                compute_dtype=compute_dtype)
+        return logits
+
+    return encode_step

@@ -1,0 +1,75 @@
+"""AdamW with warmup + cosine decay, as plain pytree ops (no optax
+dependency). Optimizer state shapes mirror parameters, so ZeRO-style
+sharding is inherited from the parameter shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def init_opt_state(params):
+    return {
+        "mu": jax.tree.map(jnp.zeros_like, params),
+        "nu": jax.tree.map(jnp.zeros_like, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(tcfg: TrainConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, tcfg.warmup_steps))
+    prog = jnp.clip((step - tcfg.warmup_steps)
+                    / max(1, tcfg.total_steps - tcfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(tcfg: TrainConfig, params, grads, opt_state):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+    count = opt_state["count"] + 1
+    cf = count.astype(jnp.float32)
+    lr = lr_schedule(tcfg, opt_state["count"])
+    b1, b2 = tcfg.b1, tcfg.b2
+    bc1 = 1 - b1 ** cf
+    bc2 = 1 - b2 ** cf
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        step = mhat / (jnp.sqrt(nhat) + 1e-8) + tcfg.weight_decay * p32
+        return (p32 - lr * step).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

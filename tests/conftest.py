@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — tests must see
+the real single CPU device; only launch/dryrun.py forces 512 devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_config(arch: str = "olmo-1b", vocab: int = 64):
+    import dataclasses
+    from repro.configs import smoke_config
+    cfg = smoke_config(arch)
+    return dataclasses.replace(cfg, vocab_size=min(cfg.vocab_size, vocab))

@@ -1,0 +1,137 @@
+"""Algorithm 2 (dynamic grouping) tests: metadata pre-filter,
+performance check, periodic eviction + requeue."""
+import pytest
+
+from repro.core.grouping import Grouper, Request
+
+
+class FakeJob:
+    _n = 0
+
+    def __init__(self, req, acc_on=None):
+        FakeJob._n += 1
+        self.job_id = f"fj{FakeJob._n}"
+        self.members = [req]
+        self.acc_on = acc_on or {}
+
+    def eval_on(self, samples):
+        return self.acc_on.get(id(samples), self.acc_on.get("*", 0.5))
+
+    def add_member(self, req):
+        self.members.append(req)
+
+    def remove_member(self, sid):
+        self.members = [m for m in self.members if m.stream_id != sid]
+
+
+def _req(sid, t=0.0, loc=(0, 0), acc=0.2, sub=None):
+    return Request(stream_id=sid, t=t, loc=loc, subsamples=sub or object(),
+                   acc=acc)
+
+
+def _grouper(**kw):
+    kw.setdefault("eps_t", 10.0)
+    kw.setdefault("delta_loc", 50.0)
+    kw.setdefault("new_job_fn", lambda r: FakeJob(r, {"*": 0.9}))
+    return Grouper(**kw)
+
+
+def test_new_request_creates_job_when_no_candidates():
+    g = _grouper()
+    jobs = []
+    g.group_request(jobs, _req("s1"))
+    assert len(jobs) == 1
+    assert jobs[0].members[0].stream_id == "s1"
+
+
+def test_metadata_prefilter_blocks_far_requests():
+    g = _grouper()
+    jobs = []
+    g.group_request(jobs, _req("s1", t=0.0, loc=(0, 0)))
+    # close in time, far in space -> new job
+    g.group_request(jobs, _req("s2", t=1.0, loc=(1000, 0)))
+    assert len(jobs) == 2
+    # far in time, close in space -> new job
+    g.group_request(jobs, _req("s3", t=100.0, loc=(0, 1)))
+    assert len(jobs) == 3
+
+
+def test_performance_check_gates_admission():
+    """Metadata matches but the job model underperforms the request's own
+    accuracy -> new job (paper line 6)."""
+    sub = object()
+    g = Grouper(eps_t=10, delta_loc=50,
+                new_job_fn=lambda r: FakeJob(r, {"*": 0.05}))
+    jobs = []
+    g.group_request(jobs, _req("s1", acc=0.0, sub=sub))
+    # job evals at 0.05 on anything; new request has own acc 0.5 > 0.05
+    g.group_request(jobs, _req("s2", acc=0.5, sub=sub))
+    assert len(jobs) == 2
+
+
+def test_best_candidate_wins():
+    sub = object()
+    g = _grouper()
+    jobs = [FakeJob(_req("a"), {"*": 0.4}), FakeJob(_req("b"), {"*": 0.8})]
+    r = _req("s2", acc=0.1, sub=sub)
+    g.group_request(jobs, r)
+    assert any(m.stream_id == "s2" for m in jobs[1].members)
+    assert all(m.stream_id != "s2" for m in jobs[0].members)
+
+
+def test_metadata_must_match_every_member():
+    """Alg. 2 line 4 quantifies over ALL members of a job."""
+    g = _grouper()
+    jobs = []
+    g.group_request(jobs, _req("s1", t=0.0, loc=(0, 0)))
+    jobs[0].acc_on = {"*": 0.9}
+    g.group_request(jobs, _req("s2", t=9.0, loc=(0, 0)))   # joins
+    assert len(jobs) == 1
+    # s3 matches s2 (t=15 within 10 of 9) but not s1 (t=0) -> new job
+    g.group_request(jobs, _req("s3", t=15.0, loc=(0, 0)))
+    assert len(jobs) == 2
+
+
+def test_eviction_on_accuracy_drop_and_requeue():
+    g = _grouper(p_drop=0.1)
+    jobs = []
+    g.group_request(jobs, _req("s1"))
+    job = jobs[0]
+    job.add_member(_req("s2"))
+    # first window: establish acc_prev = 0.9 for both
+    job.acc_on = {"*": 0.9}
+    g.update_grouping(jobs, now=10.0)
+    assert all(m.acc_prev == 0.9 for m in job.members)
+    # second window: acc drops 50% -> both evicted, requeued into new job
+    job.acc_on = {"*": 0.45}
+    g.update_grouping(jobs, now=20.0)
+    evict_events = [e for e in g.events if e["kind"] == "evict"]
+    assert len(evict_events) == 2
+    # evicted members were re-grouped (possibly together in a fresh job)
+    assert all(j.members for j in jobs)
+    total = sum(len(j.members) for j in jobs)
+    assert total == 2
+
+
+def test_no_eviction_within_threshold():
+    g = _grouper(p_drop=0.5)
+    jobs = []
+    g.group_request(jobs, _req("s1"))
+    jobs[0].acc_on = {"*": 0.8}
+    g.update_grouping(jobs, now=1.0)
+    jobs[0].acc_on = {"*": 0.6}        # -25% > -50% threshold: stays
+    g.update_grouping(jobs, now=2.0)
+    assert len(jobs) == 1 and len(jobs[0].members) == 1
+    assert not [e for e in g.events if e["kind"] == "evict"]
+
+
+def test_empty_jobs_are_dropped():
+    g = _grouper(p_drop=0.01)
+    jobs = []
+    g.group_request(jobs, _req("s1"))
+    jobs[0].acc_on = {"*": 0.9}
+    g.update_grouping(jobs, now=1.0)
+    jobs[0].acc_on = {"*": 0.1}
+    g.update_grouping(jobs, now=2.0)
+    # s1 evicted from original job -> original dropped; requeued to fresh
+    assert all(j.members for j in jobs)

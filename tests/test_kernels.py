@@ -1,0 +1,145 @@
+"""Pallas kernel sweeps: every kernel validated against its pure-jnp
+oracle (kernels/ref.py) across shapes and dtypes, in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_scan import mlstm_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,T,H,K,hd", [
+    (1, 128, 128, 4, 4, 64),      # MHA square
+    (2, 64, 64, 4, 2, 32),        # GQA
+    (1, 96, 96, 8, 1, 64),        # MQA, ragged S
+    (1, 32, 128, 4, 2, 64),       # queries appended at end (decode-ish)
+])
+@pytest.mark.parametrize("causal,window", [
+    (True, 0), (True, 32), (False, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, T, H, K, hd, causal, window, dtype):
+    if not causal and S != T:
+        pytest.skip("appended-query layout only defined for causal")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_block=32, kv_block=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_blocksize_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    outs = [flash_attention(q, k, v, q_block=qb, kv_block=kb,
+                            interpret=True)
+            for qb, kb in [(32, 32), (64, 32), (32, 64), (128, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,P,chunk", [
+    (1, 64, 2, 32, 16),
+    (2, 96, 3, 16, 32),     # ragged chunks
+    (1, 33, 1, 64, 32),     # pad
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mlstm_kernel_sweep(B, S, H, P, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, P), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, P), dtype)
+    ig = (jax.random.normal(ks[3], (B, S, H)) * 2).astype(dtype)
+    fg = (jax.random.normal(ks[4], (B, S, H)) * 2 + 1).astype(dtype)
+    out = mlstm_scan(q, k, v, ig, fg, chunk=chunk, interpret=True)
+    want = ref.mlstm_recurrent(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_mlstm_xla_chunked_matches_ref():
+    from repro.models.xlstm import mlstm_chunked
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, H, P = 2, 80, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, P))
+    k = jax.random.normal(ks[1], (B, S, H, P))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    ig = jax.random.normal(ks[3], (B, S, H)) * 2
+    fg = jax.random.normal(ks[4], (B, S, H)) * 2
+    np.testing.assert_allclose(
+        np.asarray(mlstm_chunked(q, k, v, ig, fg, chunk=32)),
+        np.asarray(ref.mlstm_recurrent(q, k, v, ig, fg)), atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 32, 16, 16),
+    (2, 80, 1, 64, 8, 32),      # pad
+    (1, 32, 4, 16, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_sweep(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, N), dtype)
+    D = jnp.ones((H,))
+    out = ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    want = ref.ssd_recurrent(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_ssd_xla_chunked_matches_ref():
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    B, S, H, P, N = 2, 48, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    D = jnp.ones((H,))
+    np.testing.assert_allclose(
+        np.asarray(ssd_chunked(x, dt, A, Bm, Cm, D, chunk=16)),
+        np.asarray(ref.ssd_recurrent(x, dt, A, Bm, Cm, D)), atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+def test_ops_dispatch_consistency():
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+    a = ops.attention(q, k, v, impl="interpret", q_block=16, kv_block=16)
+    b = ops.attention(q, k, v, impl="ref")
+    c = ops.attention(q, k, v, impl="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(c), atol=1e-5)

@@ -1,0 +1,164 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# GAIMD: proportional shares hold for arbitrary share vectors
+# ---------------------------------------------------------------------------
+@given(shares=st.lists(st.floats(0.05, 1.0), min_size=2, max_size=6))
+@settings(max_examples=20, deadline=None)
+def test_gaimd_proportionality_property(shares):
+    from repro.core import gaimd
+    p = np.asarray(shares, np.float32)
+    p = p / p.sum()
+    alpha, beta = gaimd.ecco_params(p, np.ones_like(p))
+    caps = np.full(len(p), np.inf, np.float32)
+    r = gaimd.steady_state_rates(alpha, beta, caps, shared_cap=100.0,
+                                 steps=6000, tail=2000)
+    err = gaimd.proportionality_error(r, p)
+    assert err < 0.12, (p, r, err)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch: capacity and slot invariants
+# ---------------------------------------------------------------------------
+@given(t=st.integers(4, 64), E=st.integers(2, 16), k=st.integers(1, 4),
+       cap=st.integers(1, 32), seed=st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_moe_dispatch_invariants(t, E, k, cap, seed):
+    from repro.models.moe import _dispatch_slots
+    k = min(k, E)
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, E, size=(t, k)))
+    slot, keep = _dispatch_slots(ids, E, cap)
+    slot, keep, ids = map(np.asarray, (slot, keep, ids))
+    # kept slots within capacity
+    assert (slot[keep] < cap).all()
+    assert (slot >= 0).all()
+    # no two kept (token,k) pairs share an (expert, slot) cell
+    cells = list(zip(ids[keep].tolist(), slot[keep].tolist()))
+    assert len(cells) == len(set(cells))
+    # per-expert kept count never exceeds capacity
+    for e in range(E):
+        assert keep[ids == e].sum() <= cap
+
+
+# ---------------------------------------------------------------------------
+# Allocator: greedy trace conserves budget & tracks argmax gains
+# ---------------------------------------------------------------------------
+@given(n_jobs=st.integers(1, 5), W=st.integers(1, 20),
+       seed=st.integers(0, 50))
+@settings(max_examples=30, deadline=None)
+def test_allocator_budget_conservation(n_jobs, W, seed):
+    from repro.core.allocator import ECCOAllocator
+    rng = np.random.default_rng(seed)
+
+    class J:
+        def __init__(self, i):
+            self.job_id = f"j{i}"
+            self.num_members = int(rng.integers(1, 5))
+            self.t = 0.0
+            self.r = rng.uniform(0.05, 0.5)
+
+        def eval(self):
+            return 1 - np.exp(-self.r * self.t)
+
+        def train_micro(self):
+            self.t += 1
+
+    jobs = [J(i) for i in range(n_jobs)]
+    trace = ECCOAllocator().run_window(jobs, W)
+    assert len(trace.order) == W
+    assert sum(trace.gpu_time.values()) == W
+    # every job in the initial pass ran (if budget allowed)
+    ran = set(trace.order[:n_jobs])
+    assert len(ran) == min(n_jobs, W)
+    # shares: a probability vector
+    assert abs(sum(trace.shares.values()) - 1) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Grouping: every stream belongs to at most one job at all times
+# ---------------------------------------------------------------------------
+@given(n_streams=st.integers(2, 8), seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_grouping_partition_invariant(n_streams, seed):
+    from repro.core.grouping import Grouper, Request
+    rng = np.random.default_rng(seed)
+
+    class J:
+        _n = 0
+
+        def __init__(self, req):
+            J._n += 1
+            self.job_id = f"j{J._n}"
+            self.members = [req]
+            self.acc = rng.uniform(0.3, 0.9)
+
+        def eval_on(self, s):
+            return self.acc + rng.uniform(-0.3, 0.1)
+
+        def add_member(self, r):
+            self.members.append(r)
+
+        def remove_member(self, sid):
+            self.members = [m for m in self.members if m.stream_id != sid]
+
+    g = Grouper(eps_t=rng.uniform(1, 50), delta_loc=rng.uniform(1, 200),
+                p_drop=0.1, new_job_fn=J)
+    jobs = []
+    for i in range(n_streams):
+        r = Request(stream_id=f"s{i}", t=float(rng.uniform(0, 40)),
+                    loc=(float(rng.uniform(0, 100)), 0.0),
+                    subsamples=object(), acc=float(rng.uniform(0, 0.5)))
+        g.group_request(jobs, r)
+        seen = [m.stream_id for j in jobs for m in j.members]
+        assert len(seen) == len(set(seen))      # partition
+        assert f"s{i}" in seen                  # admitted somewhere
+    g.update_grouping(jobs, now=100.0)
+    seen = [m.stream_id for j in jobs for m in j.members]
+    assert len(seen) == len(set(seen))
+    assert len(seen) == n_streams               # nobody lost
+    assert all(j.members for j in jobs)         # no empty jobs
+
+
+# ---------------------------------------------------------------------------
+# Softmax xent: matches -log p and is invariant to logit shifts
+# ---------------------------------------------------------------------------
+@given(B=st.integers(1, 3), S=st.integers(2, 8), V=st.integers(2, 32),
+       shift=st.floats(-50, 50), seed=st.integers(0, 20))
+@settings(max_examples=30, deadline=None)
+def test_xent_shift_invariance(B, S, V, shift, seed):
+    from repro.train.train_step import softmax_xent
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(B, S, V)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, size=(B, S)))
+    ce1, _ = softmax_xent(None, logits, labels)
+    ce2, _ = softmax_xent(None, logits + shift, labels)
+    assert abs(float(ce1) - float(ce2)) < 1e-3
+    # matches direct -log softmax
+    ref = -np.take_along_axis(
+        np.asarray(jax.nn.log_softmax(logits, -1)),
+        np.asarray(labels)[..., None], -1).mean()
+    assert abs(float(ce1) - float(ref)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# int8 compression: error bound holds for arbitrary tensors
+# ---------------------------------------------------------------------------
+@given(scale=st.floats(1e-3, 1e3), n=st.integers(1, 256),
+       seed=st.integers(0, 20))
+@settings(max_examples=30, deadline=None)
+def test_int8_error_bound_property(scale, n, seed):
+    from repro.train.compression import dequantize_int8, quantize_int8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    err = float(jnp.max(jnp.abs(dequantize_int8(q, s) - x)))
+    assert err <= float(s) / 2 * (1 + 1e-3) + 1e-9

@@ -1,0 +1,132 @@
+"""Sequence-parallel mLSTM (shard_map) correctness: state-summary
+algebra in-process, full block parity in a subprocess with 8 forced host
+devices."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.xlstm import (combine_mlstm_states, mlstm_chunked,
+                                mlstm_state_summary)
+
+
+def _qkvg(key, B, S, H, P):
+    ks = jax.random.split(key, 5)
+    return (jax.random.normal(ks[0], (B, S, H, P)),
+            jax.random.normal(ks[1], (B, S, H, P)),
+            jax.random.normal(ks[2], (B, S, H, P)),
+            jax.random.normal(ks[3], (B, S, H)) * 2,
+            jax.random.normal(ks[4], (B, S, H)) * 2 + 1)
+
+
+@pytest.mark.parametrize("split", [16, 64, 96])
+def test_summary_combine_matches_full(split):
+    B, S, H, P = 2, 128, 2, 16
+    q, k, v, ig, fg = _qkvg(jax.random.PRNGKey(0), B, S, H, P)
+    sa, _ = mlstm_state_summary(k[:, :split], v[:, :split],
+                                ig[:, :split], fg[:, :split], chunk=16)
+    h_b = mlstm_chunked(q[:, split:], k[:, split:], v[:, split:],
+                        ig[:, split:], fg[:, split:], chunk=16,
+                        init_state=sa)
+    h_a = mlstm_chunked(q[:, :split], k[:, :split], v[:, :split],
+                        ig[:, :split], fg[:, :split], chunk=16)
+    h_full = mlstm_chunked(q, k, v, ig, fg, chunk=16)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([h_a, h_b], 1)),
+        np.asarray(h_full), atol=1e-5)
+
+
+def test_combine_is_associative_on_invariants():
+    B, S, H, P = 1, 96, 2, 8
+    _, k, v, ig, fg = _qkvg(jax.random.PRNGKey(1), B, S, H, P)
+    thirds = [slice(0, 32), slice(32, 64), slice(64, 96)]
+    ss = [mlstm_state_summary(k[:, t], v[:, t], ig[:, t], fg[:, t],
+                              chunk=16) for t in thirds]
+    # ((s0 + s1) + s2) vs (s0 + (s1 combined later))
+    left = combine_mlstm_states(
+        combine_mlstm_states(ss[0][0], ss[1][1], ss[1][0]),
+        ss[2][1], ss[2][0])
+    full, _ = mlstm_state_summary(k, v, ig, fg, chunk=16)
+
+    def inv(s):
+        C, n, m = s
+        return (C * jnp.exp(m)[..., None, None],
+                n * jnp.exp(m)[..., None])
+
+    for a, b in zip(inv(left), inv(full)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import smoke_config
+    from repro.models.xlstm import (apply_mlstm_block,
+                                    apply_mlstm_block_seqpar,
+                                    mlstm_block_spec, mlstm_block_states)
+    from repro.models import param as P
+    cfg = smoke_config('xlstm-350m')
+    spec = mlstm_block_spec(cfg)
+    params = P.init_params(spec, jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (4, 64, cfg.d_model), jnp.float32)
+    ref, _ = apply_mlstm_block(cfg, params, x, chunk=16)
+    out = apply_mlstm_block_seqpar(cfg, params, x, mesh, chunk=16,
+                                   batch_axes=('data',))
+    assert float(jnp.max(jnp.abs(ref - out))) < 1e-4
+    ref2, cref = mlstm_block_states(cfg, params, x, chunk=16)
+    out2, c = apply_mlstm_block_seqpar(cfg, params, x, mesh, chunk=16,
+                                       want_state=True)
+    assert float(jnp.max(jnp.abs(ref2 - out2))) < 1e-4
+    assert float(jnp.max(jnp.abs(cref['conv'] - c['conv']))) < 1e-5
+    m1, m2 = cref['m'], c['m']
+    M = jnp.maximum(m1, m2)
+    a = cref['C'] * jnp.exp(m1 - M)[..., None, None]
+    b = c['C'] * jnp.exp(m2 - M)[..., None, None]
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-4
+    print("SEQPAR_OK")
+""")
+
+
+def test_seqpar_block_parity_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", SUBPROC],
+                       capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SEQPAR_OK" in r.stdout
+
+
+def test_zero_policy_rules_consistent():
+    """zero policy must never map two mesh axes onto one logical axis in
+    a conflicting way, for every arch."""
+    from repro.configs import ARCH_IDS, get_config
+    from repro.distributed.sharding import mesh_rules
+
+    class FakeMesh:
+        def __init__(self, shape):
+            self.shape = shape
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in ({"data": 16, "model": 16},
+                      {"pod": 2, "data": 16, "model": 16}):
+            rules = mesh_rules(FakeMesh(shape), cfg, policy="zero")
+            # no TP on heads/mlp under zero
+            assert rules["heads"] is None and rules["mlp"] is None
+            if rules["fsdp"] == ("data", "model"):
+                # 2D param sharding excludes vocab TP (axis conflict on
+                # the embedding table) and MoE (experts own the axis)
+                assert rules["vocab"] is None
+                assert cfg.moe is None
+                assert cfg.d_model % (16 * 16) == 0

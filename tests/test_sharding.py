@@ -1,0 +1,109 @@
+"""Sharding-policy invariants: every parameter of every arch must be
+divisible by its mesh-axis assignment on the production mesh, and
+padded_heads must preserve the GQA group structure. Runs against mesh
+*rules* without building a 256-device mesh (device-free)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.layers import padded_heads
+from repro.models.param import Spec, is_spec
+from repro.models.transformer import build_spec
+
+import jax
+
+MODEL_N = 16
+DATA_N = 16
+
+
+class FakeMesh:
+    """Just enough mesh for mesh_rules (shape dict)."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _rules(cfg, multi_pod=False):
+    from repro.distributed.sharding import mesh_rules
+    shape = ({"pod": 2, "data": DATA_N, "model": MODEL_N} if multi_pod
+             else {"data": DATA_N, "model": MODEL_N})
+    return mesh_rules(FakeMesh(shape), cfg), shape
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_every_param_divisible(arch, multi_pod):
+    cfg = get_config(arch)
+    rules, shape = _rules(cfg, multi_pod)
+    tp = MODEL_N if rules.get("heads") else 1
+    spec = build_spec(cfg, ep=MODEL_N, tp=tp)
+    leaves = jax.tree.leaves(spec, is_leaf=is_spec)
+    assert leaves, arch
+    for s in leaves:
+        for dim, ax in zip(s.shape, s.axes):
+            if ax is None:
+                continue
+            mesh_ax = rules.get(ax)
+            if mesh_ax is None:
+                continue
+            axes = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+            ways = math.prod(shape[a] for a in axes)
+            assert dim % ways == 0, (
+                f"{arch}: dim {dim} (axis {ax}->{mesh_ax}) not divisible "
+                f"by {ways} in spec {s.shape}/{s.axes}")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_moe_experts_divisible_by_ep(arch):
+    cfg = get_config(arch)
+    if cfg.moe is None:
+        pytest.skip("dense arch")
+    from repro.models.moe import padded_experts
+    E = padded_experts(cfg, MODEL_N)
+    assert E % MODEL_N == 0
+    assert E >= cfg.moe.num_experts
+    assert E - cfg.moe.num_experts < MODEL_N    # minimal padding
+
+
+@given(H=st.integers(1, 128), K=st.integers(1, 32),
+       tp=st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=200, deadline=None)
+def test_padded_heads_properties(H, K, tp):
+    if H % K:
+        H = K * max(1, H // K)     # GQA requires K | H
+    import dataclasses
+    from repro.configs.base import DENSE, ModelConfig
+    cfg = ModelConfig(name="x", family=DENSE, num_layers=1, d_model=64,
+                      num_heads=H, num_kv_heads=K, d_ff=64, vocab_size=64)
+    Hp = padded_heads(cfg, tp)
+    assert Hp >= H
+    assert Hp % K == 0                          # group structure intact
+    assert Hp <= 1.5 * H                        # bounded waste
+    if Hp % tp == 0 and Hp != H:
+        # padding achieved divisibility with per-group padding
+        assert (Hp // K) >= (H // K)
+    if H % tp == 0:
+        assert Hp == H                          # no-op when divisible
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_rule_covers_dp_axes(arch):
+    cfg = get_config(arch)
+    rules, _ = _rules(cfg, multi_pod=True)
+    assert rules["batch"] == ("pod", "data")
+
+
+def test_starcoder2_heads_padded_not_replicated():
+    cfg = get_config("starcoder2-3b")
+    rules, _ = _rules(cfg)
+    assert rules["heads"] == "model"            # 24 -> 32 pads fine
+    assert padded_heads(cfg, MODEL_N) == 32
+
+
+def test_hymba_heads_replicated_not_padded():
+    cfg = get_config("hymba-1.5b")
+    rules, _ = _rules(cfg)
+    assert rules["heads"] is None               # 25 -> 80 too wasteful
+    assert padded_heads(cfg, MODEL_N) == 25

@@ -1,0 +1,225 @@
+"""Substrate tests: drift detection, data pipeline, checkpointing,
+stragglers, gradient compression, optimizer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.drift import DriftDetector, js_divergence, token_histogram
+from repro.data.pipeline import GroupPipeline, StreamBuffer
+from repro.data.streams import DomainBank, make_fleet
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.stragglers import StragglerPolicy
+from repro.train import compression as comp
+
+
+# ---------------------------------------------------------------------------
+# drift
+# ---------------------------------------------------------------------------
+def test_drift_triggers_on_domain_switch():
+    bank = DomainBank(64, 4, dim=8, seed=0)
+    rng = np.random.default_rng(0)
+    det = DriftDetector(threshold=0.25, vocab=64)
+    det.set_reference(bank.sample(0, rng, 16, 32))
+    # same domain: no drift
+    assert not det.observe(bank.sample(0, rng, 16, 32))
+    # switched domain: drift
+    assert det.observe(bank.sample(2, rng, 16, 32))
+    # rebase: new domain becomes reference
+    det.rebase(bank.sample(2, rng, 16, 32))
+    assert not det.observe(bank.sample(2, rng, 16, 32))
+
+
+def test_js_divergence_properties():
+    p = np.array([0.5, 0.5])
+    q = np.array([0.9, 0.1])
+    assert js_divergence(p, p) == pytest.approx(0.0, abs=1e-9)
+    assert js_divergence(p, q) == pytest.approx(js_divergence(q, p))
+    assert js_divergence(p, q) > 0
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+def test_stream_buffer_ring():
+    b = StreamBuffer(seq_len=8, capacity=4)
+    b.push(np.arange(8 * 6).reshape(6, 8))
+    assert len(b) == 4
+    assert b.dropped_total == 2
+    assert b.delivered_total == 6
+    # oldest rows dropped
+    assert b.tokens[0, 0] == 16
+
+
+def test_pipeline_bandwidth_truncation_and_balance():
+    p = GroupPipeline(seq_len=8, seed=0)
+    p.deliver("a", np.zeros((10, 8), np.int64), bandwidth_tokens=3 * 8)
+    p.deliver("b", np.ones((10, 8), np.int64), bandwidth_tokens=10 * 8)
+    assert len(p.buffers["a"]) == 3
+    assert len(p.buffers["b"]) == 10
+    batch = p.group_batch(8)
+    # member-balanced: both streams contribute
+    vals = set(batch["inputs"][:, 0].tolist())
+    assert vals == {0, 1}
+    assert batch["inputs"].shape == (8, 8)
+
+
+def test_pipeline_empty_returns_none():
+    p = GroupPipeline(seq_len=8)
+    assert p.group_batch(4) is None
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    ckpt.save(str(tmp_path), 3, tree, extra={"note": "x"})
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    got, extra = ckpt.restore(str(tmp_path), 3, tree)
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(got["b"]["c"]),
+                                  np.asarray(tree["b"]["c"]))
+    assert extra == {"note": "x"}
+
+
+def test_checkpoint_atomicity_no_tmp_visible(tmp_path):
+    tree = {"a": jnp.zeros((2,))}
+    ckpt.save(str(tmp_path), 1, tree)
+    names = os.listdir(tmp_path)
+    assert all(not n.endswith(".tmp") for n in names)
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 0, {"a": jnp.zeros((2,))})
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), 0, {"a": jnp.zeros((2,)),
+                                        "b": jnp.zeros((1,))})
+
+
+def test_async_checkpointer_gc(tmp_path):
+    c = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in range(4):
+        c.save_async(s, {"a": jnp.full((2,), s)})
+    c.wait()
+    assert ckpt.list_steps(str(tmp_path)) == [2, 3]
+    got, _ = ckpt.restore(str(tmp_path), 3, {"a": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(got["a"]), [3, 3])
+
+
+# ---------------------------------------------------------------------------
+# stragglers
+# ---------------------------------------------------------------------------
+def test_straggler_quota_shrinks():
+    pol = StragglerPolicy(threshold=2.0, min_quota_frac=0.25)
+    for _ in range(8):
+        pol.record("fast1", 1.0)
+        pol.record("fast2", 1.1)
+        pol.record("slow", 5.0)
+    assert pol.is_straggler("slow")
+    assert not pol.is_straggler("fast1")
+    q = pol.quota("slow", base_quota=8)
+    assert q < 8 and q >= 2       # shrunk but bounded below
+    assert pol.quota("fast1", 8) == 8
+    rep = pol.report()
+    assert rep["jobs"]["slow"]["straggler"]
+
+
+def test_straggler_policy_cold_start():
+    pol = StragglerPolicy()
+    assert pol.quota("new", 8) == 8
+    assert not pol.is_straggler("new")
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+def test_int8_quantization_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 3
+    q, s = comp.quantize_int8(x)
+    back = comp.dequantize_int8(q, s)
+    # max error is scale/2
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Sum of compressed grads + final residual == sum of true grads."""
+    key = jax.random.PRNGKey(1)
+    grads = [jax.random.normal(jax.random.fold_in(key, i), (64,))
+             for i in range(10)]
+
+    def compress(x):
+        q, s = comp.quantize_int8(x)
+        return comp.dequantize_int8(q, s)
+
+    residual = None
+    sent = jnp.zeros((64,))
+    for g in grads:
+        c, residual = comp.with_error_feedback({"g": g}, residual,
+                                               compress)
+        sent = sent + c["g"]
+    true = sum(grads)
+    np.testing.assert_allclose(np.asarray(sent + residual["g"]),
+                               np.asarray(true), atol=1e-4)
+
+
+def test_topk_mask_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+    m = comp.topk_mask(x, frac=0.4)
+    np.testing.assert_allclose(np.asarray(m), [0, -5.0, 0, 3.0, 0])
+
+
+def test_compressed_psum_single_axis():
+    """On a 1-element mesh axis, the compressed mean must equal the input
+    up to the int8 quantization bound (scale/2 per element)."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("pod",))
+    x = jax.random.normal(jax.random.PRNGKey(2), (32,))
+    out = comp.pod_mean_compressed({"g": x}, mesh)["g"]
+    _, s = comp.quantize_int8(x)
+    assert float(jnp.max(jnp.abs(out - x))) <= float(s) / 2 + 1e-6
+
+
+def test_compressed_psum_noop_without_pod_axis():
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    x = {"g": jnp.ones((4,))}
+    out = comp.pod_mean_compressed(x, mesh)
+    np.testing.assert_array_equal(np.asarray(out["g"]),
+                                  np.asarray(x["g"]))
+
+
+def test_wire_bytes_saved():
+    d = comp.wire_bytes_saved(10**6, pods=2)
+    assert d["fp32_bytes"] == 4 * 10**6
+    assert d["reduction"] == 4.0
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_decreases_quadratic_loss():
+    from repro.configs.base import TrainConfig
+    from repro.train import optimizer as opt
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=1, total_steps=100,
+                       weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init_opt_state(params)
+    for _ in range(50):
+        grads = {"w": 2 * params["w"]}    # d/dw ||w||^2
+        params, state, m = opt.adamw_update(tcfg, params, grads, state)
+    assert float(jnp.sum(params["w"] ** 2)) < 0.1
+    assert float(m["grad_norm"]) >= 0
+
+
+def test_grad_clip():
+    from repro.train.optimizer import clip_by_global_norm
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0,
+                                                                 rel=1e-3)

@@ -1,0 +1,69 @@
+"""Transmission controller (§3.2): sampling-config table lookups, the
+f*/n_j member scaling, GPU-proportional bandwidth allocation vs the
+equal-share baseline."""
+import numpy as np
+import pytest
+
+from repro.core import transmission as tx
+
+
+def _table():
+    cfgs = [tx.SamplingConfig(rate=r, resolution=q)
+            for r in (2, 4, 8) for q in (16, 32, 64)]
+    t = tx.ProfileTable(cfgs)
+    # budget level 0: low budget -> prefer low-rate hi-res; level 1: high
+    for i, c in enumerate(cfgs):
+        t.record(0, i, 0.5 - 0.01 * c.rate + 0.002 * c.resolution)
+        t.record(1, i, 0.3 + 0.01 * c.rate + 0.001 * c.resolution)
+    return t, cfgs
+
+
+def test_profile_table_best_respects_budget():
+    t, cfgs = _table()
+    best = t.best(0, token_budget=128)
+    assert best.tokens <= 128
+    # and it is the argmax among fitting configs
+    fitting = [(t._acc[(0, i)], c) for i, c in enumerate(cfgs)
+               if c.tokens <= 128]
+    assert t._acc[(0, cfgs.index(best))] == max(a for a, _ in fitting)
+
+
+def test_profile_table_fallback_densest_fitting():
+    t = tx.ProfileTable([tx.SamplingConfig(2, 16), tx.SamplingConfig(4, 32)])
+    # no recordings at level 7 -> densest config that fits
+    assert t.best(7, token_budget=64).tokens == 32
+    assert t.best(7, token_budget=1000).tokens == 128
+
+
+def test_decision_scales_rate_by_members():
+    t, _ = _table()
+    ctrl = tx.TransmissionController(t, bytes_per_token=1.0)
+    d = ctrl.decide(gpu_budget_level=1, token_budget=512, p_share=0.6,
+                    n_members=3, achieved_bandwidth=1e6,
+                    window_seconds=1.0)
+    assert d.scaled_rate == pytest.approx(d.config.rate / 3)
+    assert d.gaimd_alpha == pytest.approx(0.6 / 3)
+    assert d.gaimd_beta == 0.5
+
+
+def test_decision_compresses_to_bandwidth():
+    t, _ = _table()
+    ctrl = tx.TransmissionController(t, bytes_per_token=2.0)
+    d = ctrl.decide(gpu_budget_level=1, token_budget=10**6, p_share=1.0,
+                    n_members=1, achieved_bandwidth=64.0,
+                    window_seconds=1.0)
+    assert d.delivered_tokens <= 64.0 * 1.0 / 2.0
+
+
+def test_proportional_beats_equal_for_matched_delivery():
+    """Table 1 mechanism: GPU-proportional bandwidth lets the high-GPU
+    flow deliver matched data volume."""
+    p = [0.3, 0.7]
+    n = [1, 1]
+    caps = [np.inf, np.inf]
+    prop = tx.allocate_bandwidth(p, n, caps, shared_cap=3.0)
+    eq = tx.equal_share_bandwidth(2, caps, shared_cap=3.0)
+    # proportional: flow 1 gets ~70% of bandwidth
+    assert prop[1] / prop.sum() == pytest.approx(0.7, abs=0.08)
+    # equal: both ~50%, so the high-GPU flow is bandwidth-starved
+    assert eq[1] / eq.sum() == pytest.approx(0.5, abs=0.08)
