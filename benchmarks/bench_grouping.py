@@ -1,19 +1,125 @@
-"""Paper Fig. 9: dynamic regrouping trace. Three mobile streams share a
-region; mid-run one diverges to a different domain (the tunnel). The
-grouper must (i) group all three initially, (ii) evict the diverged
-stream at a window boundary, (iii) give it a fresh job.
+"""Paper Fig. 9: dynamic regrouping trace, plus the fleet-scale
+candidate-selection sweep.
+
+Trace: three mobile streams share a region; mid-run one diverges to a
+different domain (the tunnel). The grouper must (i) group all three
+initially, (ii) evict the diverged stream at a window boundary,
+(iii) give it a fresh job.
+
+Scale sweep: synthetic fleets of 100 -> 10k streams; times Alg. 2
+candidate selection via the seed's pure-Python all-pairs scan vs the
+SignatureIndex vectorized prefilter (+ batched-JS top-k), and checks
+the two return identical candidate sets.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from benchmarks.common import Rows, make_engine
 from repro.core.controller import ControllerConfig, ECCOController
+from repro.core.grouping import Grouper, Request
+from repro.core.signature_index import SignatureIndex
 from repro.data.streams import DomainBank, Region, Stream
+
+FLEET_SIZES = (100, 1000, 10000)
+GROUP_SIZE = 4          # avg members per job
+N_REQUESTS = 32
+EPS_T, DELTA_LOC = 60.0, 100.0
+BUCKETS = 64
+
+
+class _MetaJob:
+    """Selection-only job stub: metadata + membership, no model."""
+
+    __slots__ = ("job_id", "members")
+
+    def __init__(self, job_id, members):
+        self.job_id = job_id
+        self.members = members
+
+
+def _make_fleet(n, rng):
+    """n streams in n/GROUP_SIZE spatiotemporally coherent jobs."""
+    jobs = []
+    sid = 0
+    for j in range(max(1, n // GROUP_SIZE)):
+        t0 = float(rng.uniform(0, 5000))
+        x0, y0 = rng.uniform(0, 5000, size=2)
+        members = []
+        for _ in range(GROUP_SIZE):
+            r = Request(
+                stream_id=f"s{sid}", t=t0 + float(rng.uniform(0, EPS_T / 4)),
+                loc=(x0 + float(rng.uniform(0, DELTA_LOC / 4)),
+                     y0 + float(rng.uniform(0, DELTA_LOC / 4))),
+                subsamples=None, acc=0.0,
+                sig=rng.random(BUCKETS).astype(np.float32))
+            members.append(r)
+            sid += 1
+        jobs.append(_MetaJob(f"job{j}", members))
+    reqs = []
+    for i in range(N_REQUESTS):
+        j = jobs[int(rng.integers(0, len(jobs)))]
+        anchor = j.members[0]
+        reqs.append(Request(
+            stream_id=f"q{i}", t=anchor.t + float(rng.uniform(0, EPS_T / 4)),
+            loc=(anchor.loc[0] + float(rng.uniform(0, DELTA_LOC / 4)),
+                 anchor.loc[1]),
+            subsamples=None, acc=0.0,
+            sig=rng.random(BUCKETS).astype(np.float32)))
+    return jobs, reqs
+
+
+def run_scale(rows: Rows):
+    rng = np.random.default_rng(0)
+    for n in FLEET_SIZES:
+        jobs, reqs = _make_fleet(n, rng)
+        py = Grouper(eps_t=EPS_T, delta_loc=DELTA_LOC)
+        index = SignatureIndex(buckets=BUCKETS, capacity=2 * n)
+        index.rebuild(jobs)
+        ix = Grouper(eps_t=EPS_T, delta_loc=DELTA_LOC, index=index)
+        ts = [r.t for r in reqs]
+        locs = [r.loc for r in reqs]
+        sigs = [r.sig for r in reqs]
+        kw = dict(eps_t=EPS_T, delta_loc=DELTA_LOC)
+        # warmups: jit the JS kernel at both query shapes, build the
+        # segment cache
+        ix._index_candidates(jobs, reqs[0])
+        index.candidate_jobs_batch(ts, locs, sigs=sigs, k=16, **kw)
+
+        t0 = time.perf_counter()
+        want = [py._python_candidates(jobs, r) for r in reqs]
+        t_py = time.perf_counter() - t0
+
+        # one-at-a-time index queries (the live group_request path)
+        t0 = time.perf_counter()
+        got_single = [ix._index_candidates(jobs, r) for r in reqs]
+        t_ix = time.perf_counter() - t0
+
+        # the batched engine: all requests of the window in one call
+        t0 = time.perf_counter()
+        got_keys = index.candidate_jobs_batch(ts, locs, **kw)
+        t_batch = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        index.candidate_jobs_batch(ts, locs, sigs=sigs, k=16, **kw)
+        t_batch16 = time.perf_counter() - t0
+
+        key_to_idx = ix._key_to_idx(jobs)
+        got_batch = [[key_to_idx[k] for k in ks] for ks in got_keys]
+        rows.add(f"n{n}_python_ms", 1e3 * t_py / N_REQUESTS)
+        rows.add(f"n{n}_index_ms", 1e3 * t_ix / N_REQUESTS)
+        rows.add(f"n{n}_batch_ms", 1e3 * t_batch / N_REQUESTS)
+        rows.add(f"n{n}_batch_top16_ms", 1e3 * t_batch16 / N_REQUESTS)
+        rows.add(f"n{n}_selection_speedup", t_py / max(t_batch, 1e-9))
+        rows.add(f"n{n}_candidates_match",
+                 int(want == got_single == got_batch))
 
 
 def run():
     rows = Rows("grouping")
+    run_scale(rows)
     engine = make_engine()
     bank = DomainBank(64, 6, dim=4, seed=0)
     # region trajectory: domain 0, switching to 1 at t=10 (shared drift)

@@ -1,5 +1,7 @@
 """Paper Fig. 2c + Fig. 8: group vs independent retraining as a function
-of cross-stream similarity.
+of cross-stream similarity — plus the fleet-scale drift-signature
+similarity sweep (per-pair Python js_divergence loop vs the batched
+pairwise_js kernel, 100 -> 10k stream signatures).
 
 High similarity   — all 3 streams in one region (same domain trajectory)
 Medium similarity — 2 streams share a domain, 1 drifts to a neighbour
@@ -14,16 +16,49 @@ reverses) at low similarity.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from benchmarks.common import Rows, make_engine
+from repro.core.drift import js_divergence
 from repro.core.grouping import Request
 from repro.core.trainer import RetrainJob
 from repro.data.streams import DomainBank
+from repro.kernels import ops
 
 VOCAB = 64
 WINDOWS = 6
 MICRO_PER_WINDOW = 2        # group budget / window (indep: 2/3 each)
+
+SIG_FLEET_SIZES = (100, 1000, 10000)
+SIG_REQUESTS = 8
+SIG_BUCKETS = 64
+
+
+def run_signature_scale(rows: Rows):
+    """(R, N) JS-divergence matrix: Python double loop vs one batched
+    pairwise_js call, swept over fleet size."""
+    rng = np.random.default_rng(0)
+    for n in SIG_FLEET_SIZES:
+        sigs = rng.random((n, SIG_BUCKETS)).astype(np.float32)
+        reqs = rng.random((SIG_REQUESTS, SIG_BUCKETS)).astype(np.float32)
+        ops.pairwise_js(reqs, sigs)                     # jit warmup
+
+        t0 = time.perf_counter()
+        loop = np.array([[js_divergence(r, s) for s in sigs]
+                         for r in reqs])
+        t_py = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        batched = np.asarray(ops.pairwise_js(reqs, sigs))
+        t_batch = time.perf_counter() - t0
+
+        rows.add(f"sig_n{n}_python_ms", 1e3 * t_py)
+        rows.add(f"sig_n{n}_batched_ms", 1e3 * t_batch)
+        rows.add(f"sig_n{n}_speedup", t_py / max(t_batch, 1e-9))
+        rows.add(f"sig_n{n}_max_abs_err",
+                 float(np.abs(batched - loop).max()))
 
 
 def _req(sid, toks):
@@ -72,6 +107,7 @@ def _run_setting(engine, bank, domains, rng):
 
 def run():
     rows = Rows("similarity")
+    run_signature_scale(rows)
     engine = make_engine()
     bank = DomainBank(VOCAB, 6, dim=4, seed=0)
     rng = np.random.default_rng(0)

@@ -4,6 +4,9 @@ allocator.py — Alg. 1 micro-window GPU allocation (objective-gain greedy
     with the size-tempered average + max-min fairness bonus).
 grouping.py — Alg. 2 dynamic grouping (metadata prefilter + accuracy
     check; periodic eviction with EMA-smoothed reference).
+signature_index.py — dense fleet arrays answering "which jobs pass the
+    prefilter and are drift-signature-similar" in one vectorized call
+    (batched pairwise-JS kernel) so grouping scales to 10k streams.
 gaimd.py — fluid-model GAIMD congestion control (rate ∝ α/(1−β)).
 transmission.py — sampling-config tables + GPU-proportional bandwidth.
 drift.py — JS-divergence drift detection over token histograms.

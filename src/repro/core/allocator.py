@@ -37,6 +37,9 @@ class ECCOAllocator:
     def __init__(self, alpha: float = 1.0, beta: float = 0.5):
         self.alpha = alpha
         self.beta = beta
+        # final objective gains of the last completed window (Alg. 1
+        # Line 15) — what estimate_shares serves between windows
+        self.last_gains: Dict[str, float] = {}
 
     # -- objective gain (Alg. 1, CalObjectiveGain) --------------------------
     def _objective_gains(self, jobs, acc, acc_gain):
@@ -51,10 +54,19 @@ class ECCOAllocator:
             gains[worst] = gains.get(worst, 0.0) + acc_gain.get(worst, 0.0)
         return gains
 
+    def _shares_from_gains(self, jobs, gains) -> Dict[str, float]:
+        pos = {j.job_id: max(gains.get(j.job_id, 0.0), 0.0) for j in jobs}
+        tot = sum(pos.values())
+        if tot <= 0:
+            return {j.job_id: 1.0 / len(jobs) for j in jobs}
+        return {k: v / tot for k, v in pos.items()}
+
     # -- Alg. 1 main loop ----------------------------------------------------
     def run_window(self, jobs: Sequence, window_micro: int) -> AllocationTrace:
         """Run one retraining window of `window_micro` micro-windows."""
         jobs = list(jobs)
+        if not jobs:          # update_grouping may have dropped every job
+            return AllocationTrace(order=[], acc={}, shares={}, gpu_time={})
         budget = window_micro
         acc: Dict[str, float] = {}
         acc_gain: Dict[str, float] = {}
@@ -81,30 +93,34 @@ class ECCOAllocator:
             micro_retraining(j)
         gains = self._objective_gains(jobs, acc, acc_gain)
 
-        # GPU-share estimate for the transmission controller (§3.2)
-        pos = {k: max(v, 0.0) for k, v in gains.items()}
-        tot = sum(pos.values())
-        if tot <= 0:
-            shares = {j.job_id: 1.0 / len(jobs) for j in jobs}
-        else:
-            shares = {k: v / tot for k, v in pos.items()}
-
         by_id = {j.job_id: j for j in jobs}
         while budget > 0:
             jid = max(gains, key=gains.get)
             micro_retraining(by_id[jid])
             gains = self._objective_gains(jobs, acc, acc_gain)
 
+        # GPU-share estimate for the transmission controller (§3.2):
+        # Alg. 1 Line 15 derives p_j from the *final* gains of the
+        # window, not the post-initial-pass snapshot
+        self.last_gains = dict(gains)
+        shares = self._shares_from_gains(jobs, gains)
         return AllocationTrace(order=order, acc=traj, shares=shares,
                                gpu_time=used)
 
     def estimate_shares(self, jobs, gains=None) -> Dict[str, float]:
         """p_j from the latest objective gains (Line 15 of Alg. 1)."""
         if gains is None:
-            gains = {j.job_id: 1.0 for j in jobs}
-        pos = {k: max(v, 0.0) for k, v in gains.items()}
-        tot = sum(pos.values()) or 1.0
-        return {k: v / tot for k, v in pos.items()}
+            known = {j.job_id: self.last_gains[j.job_id] for j in jobs
+                     if j.job_id in self.last_gains}
+            pos_known = [v for v in known.values() if v > 0]
+            # jobs created since the last window have no measured gain;
+            # seed them at the mean positive gain so new groups are not
+            # starved of bandwidth before their first micro-window
+            fill = (sum(pos_known) / len(pos_known)) if pos_known else 1.0
+            gains = {j.job_id: known.get(j.job_id, fill) for j in jobs}
+        if not jobs:
+            return {}
+        return self._shares_from_gains(jobs, gains)
 
 
 class RECLAllocator(ECCOAllocator):
@@ -122,6 +138,8 @@ class UniformAllocator(ECCOAllocator):
 
     def run_window(self, jobs: Sequence, window_micro: int) -> AllocationTrace:
         jobs = list(jobs)
+        if not jobs:
+            return AllocationTrace(order=[], acc={}, shares={}, gpu_time={})
         order, traj, used = [], {j.job_id: [] for j in jobs}, \
             {j.job_id: 0 for j in jobs}
         acc = {}

@@ -13,6 +13,7 @@ from repro.core.allocator import ECCOAllocator, AllocationTrace
 from repro.core.drift import DriftDetector
 from repro.core.gaimd import ecco_params, steady_state_rates
 from repro.core.grouping import Grouper, Request
+from repro.core.signature_index import SignatureIndex
 from repro.core.trainer import RetrainJob, SharedEngine
 from repro.data.streams import Stream
 
@@ -33,6 +34,8 @@ class ControllerConfig:
     bytes_per_token: float = 1.0
     micro_steps: int = 4
     train_batch: int = 8
+    sig_buckets: int = 64            # drift-signature histogram buckets
+    shortlist_k: int = 0             # grouping eval_on cap (0 = no cap)
 
 
 @dataclasses.dataclass
@@ -51,13 +54,18 @@ class ECCOController:
         self.streams = list(streams)
         self.cc = cc or ControllerConfig()
         self.allocator = ECCOAllocator()
+        self.sig_index = SignatureIndex(buckets=self.cc.sig_buckets,
+                                        capacity=max(64, 2 * len(streams)))
         self.grouper = Grouper(eps_t=self.cc.eps_t,
                                delta_loc=self.cc.delta_loc,
                                p_drop=self.cc.p_drop,
-                               new_job_fn=self._new_job)
+                               new_job_fn=self._new_job,
+                               index=self.sig_index,
+                               shortlist_k=self.cc.shortlist_k)
         self.jobs: List[RetrainJob] = []
         self.detectors = {s.stream_id: DriftDetector(
-            threshold=self.cc.drift_threshold, vocab=engine.cfg.vocab_size)
+            threshold=self.cc.drift_threshold, buckets=self.cc.sig_buckets,
+            vocab=engine.cfg.vocab_size)
             for s in self.streams}
         self.rng = np.random.default_rng(seed)
         self.t = 0.0
@@ -71,10 +79,13 @@ class ECCOController:
                           batch=self.cc.train_batch, seed=self._seed)
 
     def _stream_job(self, stream_id: str) -> Optional[RetrainJob]:
-        for j in self.jobs:
-            if any(m.stream_id == stream_id for m in j.members):
-                return j
-        return None
+        return self._jobs_by_stream().get(stream_id)
+
+    def _jobs_by_stream(self) -> Dict[str, RetrainJob]:
+        """One O(members) pass; callers iterating the whole fleet grab
+        this once instead of a per-stream linear scan (O(streams *
+        fleet) per window at 10k streams)."""
+        return {mem.stream_id: j for j in self.jobs for mem in j.members}
 
     def warmup(self):
         """Set drift references from time-0 data."""
@@ -89,16 +100,18 @@ class ECCOController:
 
         # 1. live data + drift detection -> retraining requests
         window_data: Dict[str, np.ndarray] = {}
+        assigned = self._jobs_by_stream()
         for s in self.streams:
             toks = s.sample(t, cc.sample_rate, cc.seq_len)
             window_data[s.stream_id] = toks
-            if self._stream_job(s.stream_id) is None:
+            if assigned.get(s.stream_id) is None:
                 if self.detectors[s.stream_id].observe(toks):
                     sub = s.sample(t, cc.eval_batch, cc.seq_len)
                     acc_now = 0.0
                     req = Request(stream_id=s.stream_id, t=t, loc=s.loc,
                                   subsamples=sub, acc=acc_now,
-                                  train_data=toks)
+                                  train_data=toks,
+                                  sig=self.detectors[s.stream_id].last_hist)
                     self.request_time.setdefault(s.stream_id, t)
                     self.grouper.group_request(self.jobs, req)
 
@@ -147,8 +160,9 @@ class ECCOController:
 
         # metrics
         acc = {}
+        by_stream = self._jobs_by_stream()
         for s in self.streams:
-            j = self._stream_job(s.stream_id)
+            j = by_stream.get(s.stream_id)
             ev = s.sample(t + 0.5, cc.eval_batch, cc.seq_len)
             if j is not None:
                 acc[s.stream_id] = self.engine.accuracy(j.state["params"], ev)

@@ -18,7 +18,10 @@ def token_histogram(tokens, buckets: int = 64, vocab: Optional[int] = None
                     ) -> np.ndarray:
     t = np.asarray(tokens).reshape(-1)
     if vocab:
-        idx = (t * buckets) // vocab
+        # tokens at exactly `vocab` (or beyond) would land in bucket
+        # `buckets`, growing the histogram to buckets+1 and breaking
+        # shape agreement with the reference in js_divergence
+        idx = np.clip((t * buckets) // vocab, 0, buckets - 1)
     else:
         idx = t % buckets
     h = np.bincount(idx.astype(np.int64), minlength=buckets).astype(np.float64)
@@ -43,6 +46,7 @@ class DriftDetector:
     vocab: Optional[int] = None
     reference: Optional[np.ndarray] = None
     last_score: float = 0.0
+    last_hist: Optional[np.ndarray] = None   # latest window signature
 
     def set_reference(self, tokens):
         self.reference = token_histogram(tokens, self.buckets, self.vocab)
@@ -50,6 +54,7 @@ class DriftDetector:
     def observe(self, tokens) -> bool:
         """Returns True if drift detected on this window of tokens."""
         h = token_histogram(tokens, self.buckets, self.vocab)
+        self.last_hist = h
         if self.reference is None:
             self.reference = h
             return False

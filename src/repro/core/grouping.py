@@ -10,6 +10,15 @@ Two stages:
     accuracy dropped more than fraction `p` relative to the previous
     window is evicted and re-enters GroupRequest as a fresh request.
 
+Candidate selection scales two ways. Without an index the seed's pure
+Python all-pairs scan runs. With a SignatureIndex attached, the
+metadata prefilter is one vectorized call over dense fleet arrays, and
+`shortlist_k` caps the number of jobs that pay the expensive `eval_on`
+model check at the k signature-most-similar (batched pairwise-JS
+kernel). For k >= #passing jobs (or k == 0) decisions are bit-identical
+to the Python scan; the index only requires that all membership
+mutations flow through this class (else call index.rebuild(jobs)).
+
 Jobs are duck-typed: .eval_on(samples) -> float, .add_member(req),
 .remove_member(stream_id), .members -> list[Request].
 """
@@ -18,6 +27,8 @@ from __future__ import annotations
 import dataclasses
 import math
 from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.signature_index import SignatureIndex
 
 
 @dataclasses.dataclass
@@ -29,6 +40,7 @@ class Request:
     acc: float                    # current (drifted) model accuracy
     model: Any = None             # the device's current model (job seed)
     train_data: Any = None        # sampled frames to contribute
+    sig: Any = None               # drift-signature histogram (buckets,)
     # bookkeeping for periodic reevaluation
     acc_prev: Optional[float] = None
     last_job: Optional[str] = None   # job that just evicted this member
@@ -41,16 +53,22 @@ def _dist(a, b) -> float:
 class Grouper:
     def __init__(self, *, eps_t: float = 60.0, delta_loc: float = 100.0,
                  p_drop: float = 0.1,
-                 new_job_fn: Callable[[Request], Any] = None):
+                 new_job_fn: Callable[[Request], Any] = None,
+                 index: Optional[SignatureIndex] = None,
+                 shortlist_k: int = 0):
         self.eps_t = eps_t
         self.delta_loc = delta_loc
         self.p_drop = p_drop
         self.new_job_fn = new_job_fn
+        self.index = index               # fleet signature/metadata arrays
+        self.shortlist_k = shortlist_k   # 0 = evaluate every passing job
         self.events: List[dict] = []     # grouping decisions (for Fig. 9)
+        self._map_cache = None           # (jobs, len) -> job_key: list idx
 
-    # -- Alg. 2 GroupRequest -------------------------------------------------
-    def group_request(self, jobs: List, req: Request):
-        candidates: Dict[int, float] = {}
+    # -- candidate selection --------------------------------------------------
+    def _python_candidates(self, jobs: List, req: Request) -> List[int]:
+        """Seed all-pairs metadata scan (reference path, O(fleet))."""
+        out = []
         for idx, job in enumerate(jobs):
             if not job.members:
                 continue
@@ -64,20 +82,57 @@ class Grouper:
                 abs(r.t - req.t) <= self.eps_t
                 and _dist(r.loc, req.loc) <= self.delta_loc
                 for r in job.members)
-            if not correlated:
-                continue
-            acc_j = job.eval_on(req.subsamples)
+            if correlated:
+                out.append(idx)
+        return out
+
+    def _key_to_idx(self, jobs: List) -> Dict[int, int]:
+        """job key -> position in `jobs`; cached while the list is
+        unmutated (every append/drop changes len before the next query,
+        so (identity, len) is a sound cache key)."""
+        c = self._map_cache
+        if c is not None and c[0] is jobs and c[1] == len(jobs):
+            return c[2]
+        m = {self.index.job_key(job.job_id): idx
+             for idx, job in enumerate(jobs)}
+        self._map_cache = (jobs, len(jobs), m)
+        return m
+
+    def _index_candidates(self, jobs: List, req: Request) -> List[int]:
+        """Vectorized prefilter + batched-JS top-k via the index."""
+        keys = self.index.candidate_jobs(
+            req.t, req.loc, eps_t=self.eps_t, delta_loc=self.delta_loc,
+            exclude_job=req.last_job, sig=req.sig, k=self.shortlist_k)
+        if not keys:
+            return []
+        key_to_idx = self._key_to_idx(jobs)
+        return sorted(key_to_idx[k] for k in keys if k in key_to_idx)
+
+    # -- Alg. 2 GroupRequest -------------------------------------------------
+    def group_request(self, jobs: List, req: Request):
+        if self.index is not None:
+            self.index.upsert(req.stream_id, req.t, req.loc, req.sig)
+            cand_idx = self._index_candidates(jobs, req)
+        else:
+            cand_idx = self._python_candidates(jobs, req)
+        candidates: Dict[int, float] = {}
+        for idx in cand_idx:                     # ascending: ties resolve
+            acc_j = jobs[idx].eval_on(req.subsamples)   # to the oldest job
             if acc_j >= req.acc:                 # performance check
                 candidates[idx] = acc_j
         if candidates:
             best = max(candidates, key=candidates.get)
             jobs[best].add_member(req)
+            if self.index is not None:
+                self.index.assign(req.stream_id, jobs[best].job_id)
             self.events.append({"kind": "join", "stream": req.stream_id,
                                 "job": jobs[best].job_id, "t": req.t,
                                 "acc_gain": candidates[best] - req.acc})
             return jobs[best]
         job = self.new_job_fn(req)
         jobs.append(job)
+        if self.index is not None:
+            self.index.assign(req.stream_id, job.job_id)
         self.events.append({"kind": "new", "stream": req.stream_id,
                             "job": job.job_id, "t": req.t})
         return job
@@ -99,6 +154,10 @@ class Grouper:
                     rel = (acc_n - r.acc_prev) / r.acc_prev
                     if rel < -self.p_drop:       # second drift detected
                         job.remove_member(r.stream_id)
+                        if self.index is not None:
+                            # detach now: later requeues this round must
+                            # not see the evicted row as a member
+                            self.index.unassign(r.stream_id)
                         r.t = now
                         r.acc = acc_n
                         r.acc_prev = None

@@ -6,9 +6,23 @@ flash_attention — blockwise online-softmax attention (GQA-aware index
 mlstm_scan — chunkwise-parallel mLSTM with the (C, n, m) matrix-memory
     state carried in VMEM scratch across the sequential chunk dim.
 ssd_scan — Mamba-2 SSD chunk scan, (P x N) state in VMEM scratch.
+pairwise_js — batched (N, M) Jensen-Shannon divergence between stream
+    drift-signature histograms: grid (nN, nM), a (TN, TM) output tile
+    per cell from the (TN, TM, B) broadcast of m = (p+q)/2, all fp32.
+    This is the similarity engine behind fleet-scale dynamic grouping
+    (core.signature_index.SignatureIndex shortlists the jobs that pay
+    the expensive eval_on model check in Alg. 2).
 
-ops.py dispatches pallas/interpret/xla/ref; ref.py holds the pure-jnp
-sequential oracles every kernel is swept against (tests/test_kernels.py).
-The paper itself has no kernel-level contribution — these optimize the
-training/serving substrate its control plane drives (DESIGN.md §6).
+ops.py dispatches every op across four impls:
+    "pallas"    — compiled Pallas kernel (TPU only)
+    "interpret" — the same kernel in interpret mode (CPU correctness)
+    "xla"       — pure-jnp blockwise/chunked form (fast everywhere; for
+                  pairwise_js a lax.map over q blocks bounding peak
+                  memory at (N, block, B))
+    "ref"       — materialize-everything oracle in ref.py (tests only)
+    "auto"      — pallas on TPU, xla elsewhere
+ref.py holds the pure-jnp oracles every kernel is swept against
+(tests/test_kernels.py); _compat.py smooths Pallas API renames across
+jax versions. The paper itself has no kernel-level contribution — these
+optimize the substrate its control plane drives (DESIGN.md §6).
 """

@@ -1,0 +1,12 @@
+"""Pallas API compatibility across jax versions.
+
+jax renamed the TPU compiler-params dataclass: 0.4.x exposes
+`pltpu.TPUCompilerParams`, newer releases `pltpu.CompilerParams`.
+Every kernel imports the resolved name from here.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or getattr(_pltpu, "TPUCompilerParams")

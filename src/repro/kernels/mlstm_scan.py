@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 F32 = jnp.float32
 
 
@@ -134,7 +136,7 @@ def mlstm_scan(q, k, v, igate, fgate, *, chunk: int = 128,
             pltpu.VMEM((1, P), F32),       # normalizer n
             pltpu.SMEM((1, 1), F32),       # log-max m
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, igate, fgate)

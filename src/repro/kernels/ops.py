@@ -16,6 +16,8 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mlstm_scan import mlstm_scan as _mlstm_pallas
+from repro.kernels.pairwise_js import pairwise_js as _pjs_pallas
+from repro.kernels.pairwise_js import pairwise_js_xla as _pjs_xla
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 
@@ -43,6 +45,21 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
     # scan form); the oracle is cheap enough at test shapes, so reuse it
     # under jit for the xla path
     return _ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+def pairwise_js(p, q, *, eps: float = 1e-12, impl: str = "auto"):
+    """(N, M) Jensen-Shannon divergence matrix. p: (N, B); q: (M, B).
+
+    The drift-signature similarity engine for fleet-scale grouping:
+    one call scores every request histogram against every candidate
+    stream signature (core.signature_index.SignatureIndex).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.pairwise_js_ref(p, q, eps=eps)
+    if impl in ("pallas", "interpret"):
+        return _pjs_pallas(p, q, eps=eps, interpret=(impl == "interpret"))
+    return _pjs_xla(p, q, eps=eps)
 
 
 def mlstm(q, k, v, igate, fgate, *, chunk: int = 128, impl: str = "auto"):

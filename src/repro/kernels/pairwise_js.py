@@ -1,0 +1,105 @@
+"""Batched pairwise Jensen-Shannon divergence as a Pallas TPU kernel.
+
+The drift-signature similarity engine behind dynamic grouping (Alg. 2):
+given N live-stream histograms and M reference histograms it produces
+the full (N, M) JS-divergence matrix in one shot, replacing the
+per-pair Python `drift.js_divergence` loop for fleet-scale candidate
+selection (SignatureIndex in core/signature_index.py).
+
+Design:
+  * Grid (nN, nM), both parallel; each cell owns a (TN, TM) output
+    tile. p rows tile over the first grid dim, q rows over the second.
+  * Per tile: rows are eps-shifted and renormalized (matching
+    drift.js_divergence), per-row negentropies hp/hq are computed once,
+    and the cross term sum_b m*log m over the (TN, TM, B) broadcast of
+    m = (p+q)/2 finishes JS = 0.5*(hp + hq) - sum m log m. All fp32.
+  * N and M are zero-padded to tile multiples; padded rows normalize to
+    the eps-uniform histogram (finite everywhere) and are sliced away.
+
+`pairwise_js_xla` is the chunked pure-jnp twin (lax.map over q blocks,
+bounding the broadcast at (N, block, B)) used on non-TPU backends.
+Validated in interpret mode against ref.pairwise_js_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+F32 = jnp.float32
+
+
+def _normalize(x, eps: float):
+    x = x.astype(F32) + eps
+    return x / jnp.sum(x, axis=-1, keepdims=True)
+
+
+def _pjs_kernel(p_ref, q_ref, o_ref, *, eps: float):
+    p = _normalize(p_ref[...], eps)                     # (TN, B)
+    q = _normalize(q_ref[...], eps)                     # (TM, B)
+    hp = jnp.sum(p * jnp.log(p), axis=-1)               # (TN,)
+    hq = jnp.sum(q * jnp.log(q), axis=-1)               # (TM,)
+    m = 0.5 * (p[:, None, :] + q[None, :, :])           # (TN, TM, B)
+    cross = jnp.sum(m * jnp.log(m), axis=-1)            # (TN, TM)
+    o_ref[...] = 0.5 * (hp[:, None] + hq[None, :]) - cross
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "n_block", "m_block", "interpret"))
+def pairwise_js(p, q, *, eps: float = 1e-12, n_block: int = 64,
+                m_block: int = 64, interpret: bool = False):
+    """p: (N, B) and q: (M, B) nonneg histograms -> (N, M) fp32 JS."""
+    N, B = p.shape
+    M = q.shape[0]
+    TN = min(n_block, max(8, N))
+    TM = min(m_block, max(8, M))
+    pn, pm = (-N) % TN, (-M) % TM
+    if pn:
+        p = jnp.pad(p, ((0, pn), (0, 0)))
+    if pm:
+        q = jnp.pad(q, ((0, pm), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_pjs_kernel, eps=eps),
+        grid=((N + pn) // TN, (M + pm) // TM),
+        in_specs=[pl.BlockSpec((TN, B), lambda i, j: (i, 0)),
+                  pl.BlockSpec((TM, B), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((TN, TM), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N + pn, M + pm), F32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(p, q)
+    return out[:N, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block"))
+def pairwise_js_xla(p, q, *, eps: float = 1e-12, block: int = 512):
+    """Chunked pure-jnp form: identical math, (N, block, B) peak memory."""
+    N, B = p.shape
+    M = q.shape[0]
+    p = _normalize(p, eps)
+    q = _normalize(q, eps)
+    hp = jnp.sum(p * jnp.log(p), axis=-1)
+    hq = jnp.sum(q * jnp.log(q), axis=-1)
+    TM = min(block, M)
+    pad = (-M) % TM
+    if pad:                      # pad rows are eps-uniform -> finite logs
+        q = jnp.pad(q, ((0, pad), (0, 0)), constant_values=1.0 / B)
+        hq = jnp.pad(hq, (0, pad))
+    qb = q.reshape(-1, TM, B)
+    hqb = hq.reshape(-1, TM)
+
+    def one(args):
+        qi, hqi = args
+        m = 0.5 * (p[:, None, :] + qi[None, :, :])
+        cross = jnp.sum(m * jnp.log(m), axis=-1)
+        return 0.5 * (hp[:, None] + hqi[None, :]) - cross
+
+    out = jax.lax.map(one, (qb, hqb))                   # (nb, N, TM)
+    return jnp.moveaxis(out, 0, 1).reshape(N, -1)[:, :M]

@@ -49,6 +49,28 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# Pairwise Jensen-Shannon divergence oracle
+# ---------------------------------------------------------------------------
+def pairwise_js_ref(p, q, *, eps: float = 1e-12):
+    """Materialized (N, M, B) JS-divergence matrix between histogram rows.
+
+    p: (N, B); q: (M, B), nonnegative (rows need not be normalized —
+    eps-shift + renormalize matches core.drift.js_divergence). Returns
+    (N, M) fp32 with out[i, j] = JS(p[i], q[j]).
+    """
+    p = jnp.asarray(p, F32) + eps
+    q = jnp.asarray(q, F32) + eps
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    q = q / jnp.sum(q, axis=-1, keepdims=True)
+    pe = p[:, None, :]                                   # (N, 1, B)
+    qe = q[None, :, :]                                   # (1, M, B)
+    m = 0.5 * (pe + qe)                                  # (N, M, B)
+    kl_pm = jnp.sum(pe * jnp.log(pe / m), axis=-1)
+    kl_qm = jnp.sum(qe * jnp.log(qe / m), axis=-1)
+    return 0.5 * (kl_pm + kl_qm)
+
+
+# ---------------------------------------------------------------------------
 # mLSTM oracle — strictly sequential recurrence (arXiv:2405.04517 eq. 19-27)
 # ---------------------------------------------------------------------------
 def mlstm_recurrent(q, k, v, igate, fgate, *, init_state=None,

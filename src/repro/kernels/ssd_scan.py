@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 F32 = jnp.float32
 
 
@@ -103,7 +105,7 @@ def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
         out_specs=x_spec,
         out_shape=jax.ShapeDtypeStruct((B, Sp, H, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, Bm, Cm, D)

@@ -104,3 +104,68 @@ def test_convergence_shifts_allocation():
     # the slow-improving job keeps receiving time in the tail
     tail = trace.order[-6:]
     assert tail.count("slow") >= 3
+
+
+def test_run_window_with_zero_jobs_returns_empty_trace():
+    """Regression: update_grouping can drop every job; the allocators
+    must hand back an empty trace instead of raising."""
+    for alloc in (ECCOAllocator(), RECLAllocator(), UniformAllocator()):
+        trace = alloc.run_window([], 8)
+        assert isinstance(trace, AllocationTrace)
+        assert trace.order == [] and trace.shares == {}
+        assert trace.acc == {} and trace.gpu_time == {}
+
+
+def test_shares_reflect_final_gains_not_initial_pass():
+    """Alg. 1 Line 15: the transmission controller consumes shares from
+    the window's FINAL gains. A job with a big first-micro gain that
+    immediately converges must not keep a stale majority share."""
+
+    class ScriptedJob:
+        def __init__(self, job_id, gains):
+            self.job_id = job_id
+            self.num_members = 1
+            self.gains = list(gains)
+            self.a = 0.0
+
+        def eval(self):
+            return self.a
+
+        def train_micro(self):
+            self.a += self.gains.pop(0) if self.gains else 0.0
+
+    early = ScriptedJob("early", [0.5])          # converges instantly
+    late = ScriptedJob("late", [0.1] * 20)       # keeps improving
+    trace = ECCOAllocator().run_window([early, late], 10)
+    assert trace.shares["late"] > trace.shares["early"]
+    assert trace.shares["late"] > 0.9
+
+
+def test_estimate_shares_uses_last_window_gains():
+    class ScriptedJob:
+        def __init__(self, job_id, gains):
+            self.job_id = job_id
+            self.num_members = 1
+            self.gains = list(gains)
+            self.a = 0.0
+
+        def eval(self):
+            return self.a
+
+        def train_micro(self):
+            self.a += self.gains.pop(0) if self.gains else 0.0
+
+    alloc = ECCOAllocator()
+    jobs = [ScriptedJob("a", [0.5]), ScriptedJob("b", [0.1] * 20)]
+    # before any window: uniform
+    assert alloc.estimate_shares(jobs) == {"a": 0.5, "b": 0.5}
+    alloc.run_window(jobs, 10)
+    p = alloc.estimate_shares(jobs)
+    assert p["b"] > p["a"]
+    # a job unseen by the last window gets a non-starving share
+    class Fresh:
+        job_id = "fresh"
+        num_members = 1
+    p = alloc.estimate_shares(jobs + [Fresh()])
+    assert p["fresh"] > 0
+    assert abs(sum(p.values()) - 1.0) < 1e-9

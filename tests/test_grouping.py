@@ -1,8 +1,11 @@
 """Algorithm 2 (dynamic grouping) tests: metadata pre-filter,
-performance check, periodic eviction + requeue."""
+performance check, periodic eviction + requeue, and equivalence of the
+SignatureIndex shortlist path with the seed's pure-Python scan."""
+import numpy as np
 import pytest
 
 from repro.core.grouping import Grouper, Request
+from repro.core.signature_index import SignatureIndex
 
 
 class FakeJob:
@@ -135,3 +138,145 @@ def test_empty_jobs_are_dropped():
     g.update_grouping(jobs, now=2.0)
     # s1 evicted from original job -> original dropped; requeued to fresh
     assert all(j.members for j in jobs)
+
+
+# ---------------------------------------------------------------------------
+# SignatureIndex shortlist path
+# ---------------------------------------------------------------------------
+class DetJob:
+    """Deterministic eval_on keyed on (job, samples) for replayable
+    grouping decisions across grouper instances."""
+
+    def __init__(self, req, counter):
+        self.job_id = f"dj{counter[0]}"
+        counter[0] += 1
+        self.members = [req]
+
+    def eval_on(self, samples):
+        seed = abs(hash((self.job_id, samples))) % (2 ** 31)
+        return float(np.random.default_rng(seed).random())
+
+    def add_member(self, req):
+        self.members.append(req)
+
+    def remove_member(self, sid):
+        self.members = [m for m in self.members if m.stream_id != sid]
+
+
+def _run_scenario(n_requests=60, **grouper_kwargs):
+    """Clustered random requests with periodic update_grouping; returns
+    (partition of streams into jobs, event trace)."""
+    rng = np.random.default_rng(7)
+    counter = [0]
+    g = Grouper(eps_t=5.0, delta_loc=30.0, p_drop=0.05,
+                new_job_fn=lambda r: DetJob(r, counter), **grouper_kwargs)
+    jobs = []
+    for i in range(n_requests):
+        req = Request(
+            stream_id=f"s{i}", t=float(rng.integers(0, 20)),
+            loc=(float(rng.integers(0, 4) * 25),
+                 float(rng.integers(0, 2) * 25)),
+            subsamples=i, acc=float(rng.random() * 0.5),
+            sig=rng.random(64).astype(np.float32))
+        g.group_request(jobs, req)
+        if i % 10 == 9:
+            g.update_grouping(jobs, now=req.t + 1.0)
+    partition = sorted(sorted(m.stream_id for m in j.members) for j in jobs)
+    events = [(e["kind"], e["stream"]) for e in g.events]
+    return partition, events
+
+
+def test_index_shortlist_reproduces_python_decisions():
+    """For k >= |jobs| (and k == 0, i.e. uncapped) the signature
+    shortlist path must make bit-identical Alg. 2 decisions, through
+    joins, new jobs, evictions and requeues."""
+    want = _run_scenario()
+    for k in (0, 10_000):
+        got = _run_scenario(index=SignatureIndex(buckets=64),
+                            shortlist_k=k)
+        assert got == want, f"shortlist_k={k} diverged from python scan"
+
+
+def test_small_shortlist_is_valid_grouping():
+    """k=1 may legitimately differ from the exhaustive scan but must
+    still produce a full partition of the streams."""
+    partition, _ = _run_scenario(index=SignatureIndex(buckets=64),
+                                 shortlist_k=1)
+    streams = sorted(s for group in partition for s in group)
+    assert streams == sorted(f"s{i}" for i in range(60))
+
+
+def test_shortlist_caps_eval_on_calls():
+    """The whole point: eval_on runs on at most k jobs per request."""
+    calls = []
+
+    class CountingJob(DetJob):
+        def eval_on(self, samples):
+            calls.append(self.job_id)
+            return 0.0          # never beats the request -> all new jobs
+
+    counter = [0]
+    g = Grouper(eps_t=1e9, delta_loc=1e9, p_drop=0.5,
+                new_job_fn=lambda r: CountingJob(r, counter),
+                index=SignatureIndex(buckets=8), shortlist_k=3)
+    jobs = []
+    rng = np.random.default_rng(0)
+    for i in range(12):
+        req = Request(stream_id=f"s{i}", t=0.0, loc=(0, 0), subsamples=i,
+                      acc=1.0, sig=rng.random(8).astype(np.float32))
+        calls.clear()
+        g.group_request(jobs, req)
+        # every prior job passes the (infinite) prefilter, yet at most
+        # k=3 paid the model evaluation
+        assert len(calls) <= 3
+
+
+def test_index_tracks_membership_through_eviction():
+    idx = SignatureIndex(buckets=4)
+    g = _grouper(index=idx)
+    jobs = []
+    g.group_request(jobs, _req("s1"))
+    g.group_request(jobs, _req("s2", loc=(1000, 0)))   # too far: own job
+    job_of = {s: k for s, k in
+              ((m.stream_id, idx._job[idx._row[m.stream_id]])
+               for j in jobs for m in j.members)}
+    assert job_of["s1"] >= 0 and job_of["s2"] >= 0
+    # force eviction of everyone, then requeue reassigns
+    jobs[0].acc_on = {"*": 0.9}
+    jobs[1].acc_on = {"*": 0.9}
+    g.update_grouping(jobs, now=1.0)
+    for j in jobs:
+        j.acc_on = {"*": 0.0}
+    g.update_grouping(jobs, now=2.0)
+    for j in jobs:
+        for m in j.members:
+            assert idx._job[idx._row[m.stream_id]] == \
+                idx.job_key(j.job_id)
+
+
+def test_index_capacity_growth():
+    idx = SignatureIndex(buckets=4, capacity=8)
+    for i in range(50):
+        idx.upsert(f"s{i}", float(i), (0.0, 0.0))
+        idx.assign(f"s{i}", f"j{i % 5}")
+    assert len(idx) == 50
+    assert idx.capacity >= 50
+    got = idx.candidate_jobs(25.0, (0.0, 0.0), eps_t=100.0, delta_loc=1.0)
+    assert got == [idx.job_key(f"j{n}") for n in range(5)]
+    # tight time window: only jobs whose EVERY member is within eps pass
+    got = idx.candidate_jobs(0.0, (0.0, 0.0), eps_t=1.0, delta_loc=1.0)
+    assert got == []
+
+
+def test_index_rebuild_matches_python_on_direct_jobs():
+    """Jobs built outside the Grouper (like the scenarios above) work on
+    the index path after rebuild(): best candidate still wins."""
+    sub = object()
+    jobs = [FakeJob(_req("a"), {"*": 0.4}), FakeJob(_req("b"), {"*": 0.8})]
+    idx = SignatureIndex(buckets=4)
+    idx.rebuild(jobs)
+    g = _grouper(index=idx, shortlist_k=100)
+    r = _req("s2", acc=0.1, sub=sub)
+    g.group_request(jobs, r)
+    assert any(m.stream_id == "s2" for m in jobs[1].members)
+    assert all(m.stream_id != "s2" for m in jobs[0].members)

@@ -5,6 +5,8 @@ padded_heads must preserve the GQA group structure. Runs against mesh
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

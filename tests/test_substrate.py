@@ -32,6 +32,21 @@ def test_drift_triggers_on_domain_switch():
     assert not det.observe(bank.sample(2, rng, 16, 32))
 
 
+def test_token_histogram_clips_token_at_vocab_boundary():
+    """Regression: a token equal to `vocab` used to land in bucket
+    `buckets`, yielding a length buckets+1 histogram that
+    shape-mismatched the reference inside js_divergence."""
+    h = token_histogram([0, 5, 64], buckets=64, vocab=64)
+    assert h.shape == (64,)
+    assert h[63] > 0                      # boundary token clipped into range
+    ref = token_histogram(np.arange(64), buckets=64, vocab=64)
+    assert np.isfinite(js_divergence(h, ref))
+    # detector survives a boundary token in the live window
+    det = DriftDetector(threshold=0.25, vocab=64)
+    det.set_reference(np.arange(64))
+    det.observe(np.array([64, 64, 1, 2]))
+
+
 def test_js_divergence_properties():
     p = np.array([0.5, 0.5])
     q = np.array([0.9, 0.1])
