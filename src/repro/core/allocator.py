@@ -113,11 +113,20 @@ class ECCOAllocator:
             known = {j.job_id: self.last_gains[j.job_id] for j in jobs
                      if j.job_id in self.last_gains}
             pos_known = [v for v in known.values() if v > 0]
-            # jobs created since the last window have no measured gain;
-            # seed them at the mean positive gain so new groups are not
-            # starved of bandwidth before their first micro-window
-            fill = (sum(pos_known) / len(pos_known)) if pos_known else 1.0
-            gains = {j.job_id: known.get(j.job_id, fill) for j in jobs}
+            if pos_known:
+                # jobs created since the last window have no measured
+                # gain; seed them at the mean positive gain so new
+                # groups are not starved of bandwidth before their
+                # first micro-window
+                fill = sum(pos_known) / len(pos_known)
+                gains = {j.job_id: known.get(j.job_id, fill)
+                         for j in jobs}
+            else:
+                # no job measured a positive gain last window (converged
+                # or noisy fleet): there is no signal to apportion, so
+                # every job — old or new — falls through to the uniform
+                # branch of _shares_from_gains
+                gains = {j.job_id: 0.0 for j in jobs}
         if not jobs:
             return {}
         return self._shares_from_gains(jobs, gains)

@@ -10,7 +10,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.allocator import ECCOAllocator, AllocationTrace
-from repro.core.drift import DriftDetector
+from repro.core.drift import DriftDetector, token_histogram
 from repro.core.gaimd import ecco_params, steady_state_rates
 from repro.core.grouping import Grouper, Request
 from repro.core.signature_index import SignatureIndex
@@ -77,9 +77,6 @@ class ECCOController:
     def _new_job(self, req: Request) -> RetrainJob:
         return RetrainJob(self.engine, req, micro_steps=self.cc.micro_steps,
                           batch=self.cc.train_batch, seed=self._seed)
-
-    def _stream_job(self, stream_id: str) -> Optional[RetrainJob]:
-        return self._jobs_by_stream().get(stream_id)
 
     def _jobs_by_stream(self) -> Dict[str, RetrainJob]:
         """One O(members) pass; callers iterating the whole fleet grab
@@ -151,11 +148,21 @@ class ECCOController:
             # 5. periodic regrouping (Alg. 2 UpdateGrouping) — evaluated
             # on each member's RECENT window data (the paper's
             # subsamples come from live transmissions), so a member that
-            # diverged this window is judged on its new distribution
+            # diverged this window is judged on its new distribution.
+            # Drift signatures are refreshed too — on the Request (an
+            # evicted member re-enters group_request ranked by the
+            # distribution it diverged TO) and in the index (so the
+            # top-k shortlist scores a job's members by their current
+            # data, not the histograms they joined with)
             for j in self.jobs:
                 for m in j.members:
-                    if m.stream_id in window_data:
-                        m.subsamples = window_data[m.stream_id]
+                    toks = window_data.get(m.stream_id)
+                    if toks is not None:
+                        m.subsamples = toks
+                        det = self.detectors[m.stream_id]
+                        m.sig = token_histogram(toks, det.buckets,
+                                                det.vocab)
+                        self.sig_index.refresh_sig(m.stream_id, m.sig)
             self.grouper.update_grouping(self.jobs, t)
 
         # metrics

@@ -63,7 +63,6 @@ class Grouper:
         self.index = index               # fleet signature/metadata arrays
         self.shortlist_k = shortlist_k   # 0 = evaluate every passing job
         self.events: List[dict] = []     # grouping decisions (for Fig. 9)
-        self._map_cache = None           # (jobs, len) -> job_key: list idx
 
     # -- candidate selection --------------------------------------------------
     def _python_candidates(self, jobs: List, req: Request) -> List[int]:
@@ -86,18 +85,6 @@ class Grouper:
                 out.append(idx)
         return out
 
-    def _key_to_idx(self, jobs: List) -> Dict[int, int]:
-        """job key -> position in `jobs`; cached while the list is
-        unmutated (every append/drop changes len before the next query,
-        so (identity, len) is a sound cache key)."""
-        c = self._map_cache
-        if c is not None and c[0] is jobs and c[1] == len(jobs):
-            return c[2]
-        m = {self.index.job_key(job.job_id): idx
-             for idx, job in enumerate(jobs)}
-        self._map_cache = (jobs, len(jobs), m)
-        return m
-
     def _index_candidates(self, jobs: List, req: Request) -> List[int]:
         """Vectorized prefilter + batched-JS top-k via the index."""
         keys = self.index.candidate_jobs(
@@ -105,7 +92,7 @@ class Grouper:
             exclude_job=req.last_job, sig=req.sig, k=self.shortlist_k)
         if not keys:
             return []
-        key_to_idx = self._key_to_idx(jobs)
+        key_to_idx = self.index.key_to_position(jobs)
         return sorted(key_to_idx[k] for k in keys if k in key_to_idx)
 
     # -- Alg. 2 GroupRequest -------------------------------------------------

@@ -78,7 +78,23 @@ class SignatureIndex:
             self._jobkey[job_id] = key
         return key
 
+    def key_to_position(self, jobs) -> Dict[int, int]:
+        """job key -> position in `jobs`. Deliberately uncached: the
+        dict is O(|jobs|) to build, and any cache keyed on the list's
+        identity/length is unsound under drop+append churn (the list
+        can return to a prior length with different contents)."""
+        return {self.job_key(job.job_id): idx
+                for idx, job in enumerate(jobs)}
+
     # -- mutation -----------------------------------------------------------
+    def _set_sig(self, row: int, sig):
+        s = np.asarray(sig, np.float32).reshape(-1)
+        if s.shape[0] != self.buckets:
+            raise ValueError(f"signature has {s.shape[0]} buckets, "
+                             f"index holds {self.buckets}")
+        self._sig[row] = s
+        self._has_sig[row] = True
+
     def upsert(self, stream_id: str, t: float, loc, sig=None) -> int:
         """Insert/refresh a stream's request row; clears job assignment
         (a stream re-enters the index exactly when it becomes a free
@@ -94,15 +110,22 @@ class SignatureIndex:
         self._loc[row, 0] = float(loc[0])
         self._loc[row, 1] = float(loc[1])
         if sig is not None:
-            s = np.asarray(sig, np.float32).reshape(-1)
-            if s.shape[0] != self.buckets:
-                raise ValueError(f"signature has {s.shape[0]} buckets, "
-                                 f"index holds {self.buckets}")
-            self._sig[row] = s
-            self._has_sig[row] = True
+            self._set_sig(row, sig)
         self._active[row] = True
         self._job[row] = -1
         return row
+
+    def refresh_sig(self, stream_id: str, sig):
+        """Update a stream's drift signature in place, PRESERVING its
+        job assignment (upsert clears it: it models a stream re-entering
+        as a free request). The controller calls this at window end so
+        the top-k shortlist scores a job's members by their current
+        distribution, not the histograms they joined with."""
+        row = self._row.get(stream_id)
+        if row is None:
+            return
+        self._gen += 1
+        self._set_sig(row, sig)
 
     def assign(self, stream_id: str, job_id: str):
         self._gen += 1

@@ -56,6 +56,8 @@ def pairwise_js(p, q, *, eps: float = 1e-12, n_block: int = 64,
     """p: (N, B) and q: (M, B) nonneg histograms -> (N, M) fp32 JS."""
     N, B = p.shape
     M = q.shape[0]
+    if N == 0 or M == 0:
+        return jnp.zeros((N, M), F32)
     TN = min(n_block, max(8, N))
     TM = min(m_block, max(8, M))
     pn, pm = (-N) % TN, (-M) % TM
@@ -83,6 +85,8 @@ def pairwise_js_xla(p, q, *, eps: float = 1e-12, block: int = 512):
     """Chunked pure-jnp form: identical math, (N, block, B) peak memory."""
     N, B = p.shape
     M = q.shape[0]
+    if N == 0 or M == 0:
+        return jnp.zeros((N, M), F32)
     p = _normalize(p, eps)
     q = _normalize(q, eps)
     hp = jnp.sum(p * jnp.log(p), axis=-1)

@@ -27,6 +27,22 @@ class FakeJob:
         self.t += 1.0
 
 
+class ScriptedJob:
+    """Deterministic per-micro-window accuracy gains (then flat)."""
+
+    def __init__(self, job_id, gains):
+        self.job_id = job_id
+        self.num_members = 1
+        self.gains = list(gains)
+        self.a = 0.0
+
+    def eval(self):
+        return self.a
+
+    def train_micro(self):
+        self.a += self.gains.pop(0) if self.gains else 0.0
+
+
 def test_budget_fully_consumed_and_counted():
     jobs = [FakeJob("a", 2), FakeJob("b", 1)]
     trace = ECCOAllocator().run_window(jobs, window_micro=10)
@@ -120,20 +136,6 @@ def test_shares_reflect_final_gains_not_initial_pass():
     """Alg. 1 Line 15: the transmission controller consumes shares from
     the window's FINAL gains. A job with a big first-micro gain that
     immediately converges must not keep a stale majority share."""
-
-    class ScriptedJob:
-        def __init__(self, job_id, gains):
-            self.job_id = job_id
-            self.num_members = 1
-            self.gains = list(gains)
-            self.a = 0.0
-
-        def eval(self):
-            return self.a
-
-        def train_micro(self):
-            self.a += self.gains.pop(0) if self.gains else 0.0
-
     early = ScriptedJob("early", [0.5])          # converges instantly
     late = ScriptedJob("late", [0.1] * 20)       # keeps improving
     trace = ECCOAllocator().run_window([early, late], 10)
@@ -142,19 +144,6 @@ def test_shares_reflect_final_gains_not_initial_pass():
 
 
 def test_estimate_shares_uses_last_window_gains():
-    class ScriptedJob:
-        def __init__(self, job_id, gains):
-            self.job_id = job_id
-            self.num_members = 1
-            self.gains = list(gains)
-            self.a = 0.0
-
-        def eval(self):
-            return self.a
-
-        def train_micro(self):
-            self.a += self.gains.pop(0) if self.gains else 0.0
-
     alloc = ECCOAllocator()
     jobs = [ScriptedJob("a", [0.5]), ScriptedJob("b", [0.1] * 20)]
     # before any window: uniform
@@ -169,3 +158,23 @@ def test_estimate_shares_uses_last_window_gains():
     p = alloc.estimate_shares(jobs + [Fresh()])
     assert p["fresh"] > 0
     assert abs(sum(p.values()) - 1.0) < 1e-9
+
+
+def test_estimate_shares_no_positive_gains_stays_uniform():
+    """Regression: when the last window ended with every gain <= 0
+    (converged/noisy fleet), the arrival of one fresh job must not hand
+    it 100% of the bandwidth and zero the whole existing fleet — shares
+    fall back to uniform exactly as they do without the fresh job."""
+    alloc = ECCOAllocator()
+    jobs = [ScriptedJob("old1", []), ScriptedJob("old2", [-0.05] * 20)]
+    alloc.run_window(jobs, 6)
+    assert all(v <= 0 for v in alloc.last_gains.values())
+    # without a fresh job: uniform fallback
+    assert alloc.estimate_shares(jobs) == {"old1": 0.5, "old2": 0.5}
+
+    class Fresh:
+        job_id = "fresh"
+        num_members = 1
+    p = alloc.estimate_shares(jobs + [Fresh()])
+    assert p == pytest.approx({"old1": 1 / 3, "old2": 1 / 3,
+                               "fresh": 1 / 3})

@@ -6,6 +6,7 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
 
 from repro.distributed.elastic import MeshSpec, plan_recovery, shrink_mesh
@@ -86,6 +87,9 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.skipif(not hasattr(jax.sharding, "AxisType"),
+                    reason="elastic re-mesh needs jax.sharding.AxisType "
+                           "(newer jax)")
 def test_elastic_recovery_subprocess(tmp_path):
     env = dict(os.environ, CKPT_DIR=str(tmp_path),
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",

@@ -254,6 +254,36 @@ def test_index_tracks_membership_through_eviction():
                 idx.job_key(j.job_id)
 
 
+def test_no_stale_lookup_after_drop_and_requeue_append():
+    """Regression: update_grouping dropping an empty job and a
+    no-candidate requeue appending a fresh one leaves `jobs` with the
+    same identity and length but different contents. A key->position
+    map cached on (identity, len) survived that churn and joined the
+    wrong job; the lookup must reflect the current list."""
+    idx = SignatureIndex(buckets=4)
+    g = _grouper(index=idx)
+    jobs = []
+    g.group_request(jobs, _req("s1", t=0.0, loc=(0, 0)))
+    g.group_request(jobs, _req("s2", t=0.0, loc=(1000, 0)))
+    job_near, job_far = jobs
+    # a join (len unchanged) builds any key->position lookup state
+    g.group_request(jobs, _req("s_warm", t=0.0, loc=(1000, 0)))
+    assert len(jobs) == 2 and len(job_far.members) == 2
+    # establish acc_prev, then crash job_near's accuracy: s1 is evicted,
+    # job_near dropped, and the requeue finds no candidates (job_far is
+    # 1000 away, job_near excluded) so a fresh job is appended -- same
+    # list object, same length, different contents
+    g.update_grouping(jobs, now=1.0)
+    job_near.acc_on = {"*": 0.1}
+    g.update_grouping(jobs, now=2.0)
+    assert len(jobs) == 2 and jobs[0] is job_far
+    assert [m.stream_id for m in jobs[1].members] == ["s1"]
+    # a request next to job_far must join job_far, not s1's fresh job
+    g.group_request(jobs, _req("s4", t=2.0, loc=(1000, 0)))
+    assert any(m.stream_id == "s4" for m in job_far.members)
+    assert all(m.stream_id != "s4" for m in jobs[1].members)
+
+
 def test_index_capacity_growth():
     idx = SignatureIndex(buckets=4, capacity=8)
     for i in range(50):
@@ -266,6 +296,31 @@ def test_index_capacity_growth():
     # tight time window: only jobs whose EVERY member is within eps pass
     got = idx.candidate_jobs(0.0, (0.0, 0.0), eps_t=1.0, delta_loc=1.0)
     assert got == []
+
+
+def test_refresh_sig_preserves_assignment_and_reranks():
+    """refresh_sig must update a member's signature in place (upsert
+    would clear the job assignment) so the top-k shortlist tracks the
+    member's CURRENT distribution."""
+    idx = SignatureIndex(buckets=4)
+    idx.upsert("a", 0.0, (0, 0), [1, 0, 0, 0])
+    idx.assign("a", "jA")
+    idx.upsert("b", 0.0, (0, 0), [0, 0, 1, 1])
+    idx.assign("b", "jB")
+    kw = dict(eps_t=10.0, delta_loc=10.0)
+    # request signature closest to b's -> k=1 shortlists jB
+    assert idx.candidate_jobs(0.0, (0, 0), sig=[0, 0, 0, 1], k=1,
+                              **kw) == [idx.job_key("jB")]
+    # stream a's distribution moves onto the request's: the refresh
+    # keeps its assignment and flips the shortlist to jA
+    idx.refresh_sig("a", [0, 0, 0, 1])
+    assert idx._job[idx._row["a"]] == idx.job_key("jA")
+    assert idx.candidate_jobs(0.0, (0, 0), sig=[0, 0, 0, 1], k=1,
+                              **kw) == [idx.job_key("jA")]
+    # unknown streams are a no-op, wrong bucket count still raises
+    idx.refresh_sig("ghost", [0, 0, 0, 1])
+    with pytest.raises(ValueError):
+        idx.refresh_sig("a", [1, 2, 3])
 
 
 def test_index_rebuild_matches_python_on_direct_jobs():

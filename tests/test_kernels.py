@@ -153,6 +153,17 @@ def test_pairwise_js_sweep(N, M, B, impl):
     np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
 
 
+@pytest.mark.parametrize("impl", ["interpret", "xla", "ref"])
+def test_pairwise_js_empty_inputs(impl):
+    """Zero streams on either side must yield an empty matrix, not a
+    crash (the xla path divided by a zero tile size at M == 0)."""
+    p = np.ones((3, 64), np.float32)
+    e = np.zeros((0, 64), np.float32)
+    assert np.asarray(ops.pairwise_js(p, e, impl=impl)).shape == (3, 0)
+    assert np.asarray(ops.pairwise_js(e, p, impl=impl)).shape == (0, 3)
+    assert np.asarray(ops.pairwise_js(e, e, impl=impl)).shape == (0, 0)
+
+
 def test_pairwise_js_matches_scalar_js_divergence():
     """The batched engine agrees with drift.js_divergence per pair."""
     from repro.core.drift import js_divergence

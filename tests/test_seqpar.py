@@ -96,6 +96,9 @@ SUBPROC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.skipif(not hasattr(jax, "shard_map"),
+                    reason="seq-parallel block needs jax.shard_map "
+                           "(newer jax)")
 def test_seqpar_block_parity_subprocess():
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",

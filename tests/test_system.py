@@ -129,6 +129,37 @@ def test_controller_groups_by_region():
         assert len(regions) == 1, wm.groups
 
 
+def test_member_signatures_track_recent_window(engine):
+    """The regrouping step must refresh each member's drift signature
+    along with its subsamples: an evicted member re-enters group_request
+    ranked by the distribution it drifted TO, and a stale signature
+    would shortlist the old domain's jobs."""
+    from repro.core.drift import token_histogram
+    bank, streams = make_fleet(vocab=VOCAB, regions=1,
+                               streams_per_region=2, dim=4,
+                               switch_times=(5.0,), seed=3)
+    cc = ControllerConfig(window_micro=4, micro_steps=2, train_batch=8,
+                          drift_threshold=0.25, p_drop=0.5,
+                          shared_bandwidth=1e9)
+    ctl = ECCOController(engine, streams, cc, seed=0)
+    ctl.warmup()
+    for _ in range(3):
+        ctl.run_window()
+    members = [m for j in ctl.jobs for m in j.members]
+    assert members
+    # step 5 derives sig and subsamples from the same window tokens, so
+    # after any window the two must agree; a signature frozen at
+    # request-creation time diverges on the next window's sample noise
+    for m in members:
+        np.testing.assert_allclose(
+            m.sig, token_histogram(m.subsamples, cc.sig_buckets,
+                                   engine.cfg.vocab_size))
+        # the index row the shortlist scores against is refreshed too
+        row = ctl.sig_index._row[m.stream_id]
+        np.testing.assert_allclose(ctl.sig_index._sig[row], m.sig,
+                                   atol=1e-6)
+
+
 def test_controller_adapts_accuracy_over_windows():
     cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=VOCAB)
     engine = SharedEngine(cfg)
