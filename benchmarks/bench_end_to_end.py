@@ -14,7 +14,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Rows, make_engine, run_framework
+from repro.data.scenarios import build_scenario
 from repro.data.streams import make_fleet
+from repro.testing.trace import run_scenario
 
 WINDOWS = 8
 
@@ -41,6 +43,16 @@ def run():
             ctl = run_framework(fw, engine, streams, windows=WINDOWS,
                                 window_micro=8, shared_bandwidth=bw)
             rows.add(f"bw{int(bw)}_{fw}_acc", ctl.mean_accuracy(last_k=3))
+
+    # --- (c) drift-pattern diversity (repro.data.scenarios) ------------
+    # the recurring and correlated-burst patterns stress model reuse and
+    # grouping in ways the single-switch fleet above cannot
+    for name in ("diurnal", "flash_crowd"):
+        for fw in ("recl", "ecco"):
+            sc = build_scenario(name, seed=0)
+            ctl = run_scenario(fw, sc, engine=engine, window_micro=8,
+                               shared_bandwidth=96.0)
+            rows.add(f"{name}_{fw}_acc", ctl.mean_accuracy(last_k=3))
     return rows.emit()
 
 

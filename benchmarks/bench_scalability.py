@@ -1,30 +1,43 @@
-"""Paper Fig. 7: scalability — accuracy and response time as the number
-of streams grows under a FIXED compute budget. Independent retraining's
-demand grows linearly with streams; group retraining aggregates
-correlated streams, so degradation is milder (the paper reports 3.3x
-more cameras at equal accuracy).
+"""Paper Fig. 7 + fleet-scale extensions.
+
+Three sections:
+  (a) scalability — accuracy and response time as the number of streams
+      grows under a FIXED compute budget (the paper's 3.3x claim).
+  (b) drift-detection speedup — the per-stream token_histogram +
+      js_divergence Python loop vs FleetDriftDetector's one batched
+      call, at 1k and 10k streams.
+  (c) scenario sweep — all five scenarios from repro.data.scenarios run
+      end to end under ECCO and a baseline.
+
+`--smoke` (or SMOKE=1) shrinks every axis for CI: the point there is
+that scenario/benchmark code paths execute, not the numbers.
 """
 from __future__ import annotations
+
+import os
+import sys
+import time
 
 import numpy as np
 
 from benchmarks.common import Rows, make_engine, run_framework
+from repro.core.drift import DriftDetector, FleetDriftDetector
+from repro.data.scenarios import SCENARIOS, build_scenario
 from repro.data.streams import make_fleet
+from repro.testing.trace import run_scenario
 
 WINDOWS = 8
 BUDGET = 8          # micro-windows/window, fixed while streams grow
 ACC_THRESHOLD = 0.4
 
 
-def run():
-    rows = Rows("scalability")
-    engine = make_engine()
+def _scalability(rows: Rows, engine, windows: int, sizes):
     summary = {}
-    for n_per in (1, 2, 4):        # 2 regions x n = 2/4/8 streams
+    for n_per in sizes:            # 2 regions x n streams each
         for fw in ("recl", "ecco"):
             _, streams = make_fleet(regions=2, streams_per_region=n_per,
                                     switch_times=(10.0,), seed=0)
-            ctl = run_framework(fw, engine, streams, windows=WINDOWS,
+            ctl = run_framework(fw, engine, streams, windows=windows,
                                 window_micro=BUDGET,
                                 shared_bandwidth=96.0)
             acc = ctl.mean_accuracy(last_k=3)
@@ -35,19 +48,92 @@ def run():
             rows.add(f"n{n}_{fw}_acc", acc)
             rows.add(f"n{n}_{fw}_response_time", mean_rt)
             summary[(n, fw)] = acc
-    # paper claim: ECCO degrades slower with scale than RECL
-    drop_ecco = summary[(2, "ecco")] - summary[(8, "ecco")]
-    drop_recl = summary[(2, "recl")] - summary[(8, "recl")]
-    rows.add("acc_drop_2to8_ecco", drop_ecco)
-    rows.add("acc_drop_2to8_recl", drop_recl)
+    lo, hi = 2 * sizes[0], 2 * sizes[-1]
+    drop_ecco = summary[(lo, "ecco")] - summary[(hi, "ecco")]
+    drop_recl = summary[(lo, "recl")] - summary[(hi, "recl")]
+    rows.add(f"acc_drop_{lo}to{hi}_ecco", drop_ecco)
+    rows.add(f"acc_drop_{lo}to{hi}_recl", drop_recl)
     rows.add("ecco_degrades_slower", int(drop_ecco < drop_recl + 0.02))
-    # supported streams at the accuracy RECL achieves with 8 streams
-    target = summary[(8, "recl")]
-    for n in (2, 4, 8):
-        if summary[(n, "ecco")] >= target:
-            rows.add("ecco_supports_n_at_recl8_acc", n)
+    # supported streams at the accuracy RECL achieves at the top size
+    target = summary[(hi, "recl")]
+    for n_per in sizes:
+        if summary[(2 * n_per, "ecco")] >= target:
+            rows.add(f"ecco_supports_n_at_recl{hi}_acc", 2 * n_per)
+
+
+def _drift_speedup(rows: Rows, sizes, *, batch=8, seq=32, vocab=64,
+                   buckets=64, repeats=3):
+    """Window-loop drift detection: scalar per-stream Python loop vs
+    one batched FleetDriftDetector call on identical data."""
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        ref_toks = rng.integers(0, vocab, size=(n, batch, seq))
+        live_toks = rng.integers(0, vocab, size=(n, batch, seq))
+        ids = [f"s{i}" for i in range(n)]
+
+        dets = {sid: DriftDetector(threshold=0.25, buckets=buckets,
+                                   vocab=vocab) for sid in ids}
+        for sid, tk in zip(ids, ref_toks):
+            dets[sid].set_reference(tk)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            scalar_trig = [sid for sid, tk in zip(ids, live_toks)
+                           if dets[sid].observe(tk)]
+        t_scalar = (time.perf_counter() - t0) / repeats
+
+        fleet = FleetDriftDetector(threshold=0.25, buckets=buckets,
+                                   vocab=vocab)
+        fleet.set_references(ids, ref_toks)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fleet_trig = fleet.observe(ids, live_toks)
+        t_fleet = (time.perf_counter() - t0) / repeats
+
+        assert fleet_trig == scalar_trig     # decisions bit-identical
+        rows.add(f"drift_n{n}_scalar_ms", 1e3 * t_scalar)
+        rows.add(f"drift_n{n}_fleet_ms", 1e3 * t_fleet)
+        rows.add(f"drift_n{n}_speedup", t_scalar / max(t_fleet, 1e-9))
+
+
+# smoke runs are only 3 windows long; pull every scenario's drift /
+# churn events early enough to actually exercise grouping
+_SMOKE_OVERRIDES = {
+    "drift_wave": dict(wave_start=5.0, wave_step=5.0),
+    "diurnal": dict(period=10.0),
+    "flash_crowd": dict(flash_time=5.0),
+    "camera_churn": dict(switch_time=5.0, join_window=1, leave_window=2),
+    "bandwidth_contention": dict(switch_time=5.0),
+}
+
+
+def _scenarios(rows: Rows, engine, windows=None, *,
+               frameworks=("ecco", "naive"), overrides=None):
+    """Every scenario runs end to end under ECCO and a baseline (one
+    shared engine: scenario banks share the benchmark vocab)."""
+    for name in sorted(SCENARIOS):
+        for fw in frameworks:
+            sc = build_scenario(name, seed=0, **(overrides or {}).get(
+                name, {}))
+            ctl = run_scenario(fw, sc, engine=engine, windows=windows,
+                               window_micro=4, micro_steps=2,
+                               train_batch=8, p_drop=0.5)
+            rows.add(f"{name}_{fw}_acc", ctl.mean_accuracy(last_k=2))
+            rows.add(f"{name}_{fw}_jobs", len(ctl.jobs))
+
+
+def run(smoke: bool = False):
+    rows = Rows("scalability")
+    engine = make_engine()
+    if smoke:
+        _scalability(rows, engine, windows=2, sizes=(1, 2))
+        _drift_speedup(rows, sizes=(100, 1000), repeats=1)
+        _scenarios(rows, engine, windows=3, overrides=_SMOKE_OVERRIDES)
+    else:
+        _scalability(rows, engine, windows=WINDOWS, sizes=(1, 2, 4))
+        _drift_speedup(rows, sizes=(1000, 10000))
+        _scenarios(rows, engine)         # scenario-native horizons
     return rows.emit()
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv[1:] or bool(os.environ.get("SMOKE")))

@@ -12,20 +12,12 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs import smoke_config
-from repro.core.baselines import (EkyaController, NaiveController,
-                                  RECLController)
-from repro.core.controller import ControllerConfig, ECCOController
+from repro.core.baselines import FRAMEWORKS
+from repro.core.controller import ControllerConfig
 from repro.core.trainer import SharedEngine
 from repro.data.streams import make_fleet
 
 VOCAB = 64
-
-FRAMEWORKS = {
-    "ecco": ECCOController,
-    "naive": NaiveController,
-    "ekya": EkyaController,
-    "recl": RECLController,
-}
 
 
 def make_engine(arch: str = "olmo-1b", vocab: int = VOCAB) -> SharedEngine:

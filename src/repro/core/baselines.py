@@ -105,3 +105,12 @@ class RECLController(EkyaController):
             for k in list(self.zoo)[:-32]:
                 del self.zoo[k]
         return wm
+
+
+# Framework registry shared by benchmarks and the golden-trace harness.
+FRAMEWORKS = {
+    "ecco": ECCOController,
+    "naive": NaiveController,
+    "ekya": EkyaController,
+    "recl": RECLController,
+}

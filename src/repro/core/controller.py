@@ -10,7 +10,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.allocator import ECCOAllocator, AllocationTrace
-from repro.core.drift import DriftDetector, token_histogram
+from repro.core.drift import FleetDriftDetector, batch_token_histogram
 from repro.core.gaimd import ecco_params, steady_state_rates
 from repro.core.grouping import Grouper, Request
 from repro.core.signature_index import SignatureIndex
@@ -36,6 +36,7 @@ class ControllerConfig:
     train_batch: int = 8
     sig_buckets: int = 64            # drift-signature histogram buckets
     shortlist_k: int = 0             # grouping eval_on cap (0 = no cap)
+    drift_impl: str = "exact"        # FleetDriftDetector scoring backend
 
 
 @dataclasses.dataclass
@@ -63,10 +64,11 @@ class ECCOController:
                                index=self.sig_index,
                                shortlist_k=self.cc.shortlist_k)
         self.jobs: List[RetrainJob] = []
-        self.detectors = {s.stream_id: DriftDetector(
+        self.fleet = FleetDriftDetector(
             threshold=self.cc.drift_threshold, buckets=self.cc.sig_buckets,
-            vocab=engine.cfg.vocab_size)
-            for s in self.streams}
+            vocab=engine.cfg.vocab_size, impl=self.cc.drift_impl)
+        for s in self.streams:
+            self.fleet.add_stream(s.stream_id)
         self.rng = np.random.default_rng(seed)
         self.t = 0.0
         self.history: List[WindowMetrics] = []
@@ -86,31 +88,66 @@ class ECCOController:
 
     def warmup(self):
         """Set drift references from time-0 data."""
-        for s in self.streams:
-            toks = s.sample(0.0, self.cc.sample_rate, self.cc.seq_len)
-            self.detectors[s.stream_id].set_reference(toks)
+        if not self.streams:
+            return
+        toks = np.stack([s.sample(0.0, self.cc.sample_rate, self.cc.seq_len)
+                         for s in self.streams])
+        self.fleet.set_references([s.stream_id for s in self.streams], toks)
+
+    # -- fleet membership (camera churn) -------------------------------
+    def add_stream(self, stream: Stream, *, warm: bool = True):
+        """A camera joins the fleet mid-run. Its drift reference is set
+        from its first window of data (deployment-time snapshot)."""
+        self.streams.append(stream)
+        self.fleet.add_stream(stream.stream_id)
+        if warm:
+            toks = stream.sample(self.t, self.cc.sample_rate,
+                                 self.cc.seq_len)
+            self.fleet.set_reference(stream.stream_id, toks)
+
+    def remove_stream(self, stream_id: str):
+        """A camera leaves the fleet: drop its detector row, its job
+        membership (empty jobs die), and its grouping-index row."""
+        self.streams = [s for s in self.streams
+                        if s.stream_id != stream_id]
+        self.fleet.remove_stream(stream_id)
+        job = self._jobs_by_stream().get(stream_id)
+        if job is not None:
+            job.remove_member(stream_id)
+            job.purge_stream_data(stream_id)
+        self.jobs[:] = [j for j in self.jobs if j.members]
+        self.sig_index.remove(stream_id)
 
     # ------------------------------------------------------------------
     def run_window(self) -> WindowMetrics:
         cc = self.cc
         t = self.t
 
-        # 1. live data + drift detection -> retraining requests
+        # 1. live data + drift detection -> retraining requests.
+        # Sampling stays per-stream (each stream owns its rng), but
+        # scoring is ONE batched fleet call (FleetDriftDetector) instead
+        # of a token_histogram + js_divergence Python loop per camera.
         window_data: Dict[str, np.ndarray] = {}
         assigned = self._jobs_by_stream()
+        ids = [s.stream_id for s in self.streams]
+        if self.streams:
+            toks_all = np.stack([s.sample(t, cc.sample_rate, cc.seq_len)
+                                 for s in self.streams])
+            window_data = dict(zip(ids, toks_all))
+            triggered = set(self.fleet.observe(ids, toks_all))
+        else:
+            triggered = set()
         for s in self.streams:
-            toks = s.sample(t, cc.sample_rate, cc.seq_len)
-            window_data[s.stream_id] = toks
-            if assigned.get(s.stream_id) is None:
-                if self.detectors[s.stream_id].observe(toks):
-                    sub = s.sample(t, cc.eval_batch, cc.seq_len)
-                    acc_now = 0.0
-                    req = Request(stream_id=s.stream_id, t=t, loc=s.loc,
-                                  subsamples=sub, acc=acc_now,
-                                  train_data=toks,
-                                  sig=self.detectors[s.stream_id].last_hist)
-                    self.request_time.setdefault(s.stream_id, t)
-                    self.grouper.group_request(self.jobs, req)
+            if (assigned.get(s.stream_id) is None
+                    and s.stream_id in triggered):
+                sub = s.sample(t, cc.eval_batch, cc.seq_len)
+                acc_now = 0.0
+                req = Request(stream_id=s.stream_id, t=t, loc=s.loc,
+                              subsamples=sub, acc=acc_now,
+                              train_data=window_data[s.stream_id],
+                              sig=self.fleet.hist(s.stream_id))
+                self.request_time.setdefault(s.stream_id, t)
+                self.grouper.group_request(self.jobs, req)
 
         # 2. GPU shares estimate -> transmission control (GAIMD)
         shares: Dict[str, float] = {}
@@ -140,7 +177,7 @@ class ECCOController:
                                       / cc.bytes_per_token / cc.seq_len)
                     n_seq = max(1, min(toks.shape[0] // max(1, j.num_members),
                                        deliverable))
-                    j.ingest(toks[:n_seq])
+                    j.ingest(toks[:n_seq], m.stream_id)
 
             # 4. allocator runs the retraining window (Alg. 1)
             self.allocator.run_window(self.jobs, cc.window_micro)
@@ -154,15 +191,16 @@ class ECCOController:
             # distribution it diverged TO) and in the index (so the
             # top-k shortlist scores a job's members by their current
             # data, not the histograms they joined with)
-            for j in self.jobs:
-                for m in j.members:
-                    toks = window_data.get(m.stream_id)
-                    if toks is not None:
-                        m.subsamples = toks
-                        det = self.detectors[m.stream_id]
-                        m.sig = token_histogram(toks, det.buckets,
-                                                det.vocab)
-                        self.sig_index.refresh_sig(m.stream_id, m.sig)
+            members = [m for j in self.jobs for m in j.members
+                       if window_data.get(m.stream_id) is not None]
+            if members:
+                sigs = batch_token_histogram(
+                    np.stack([window_data[m.stream_id] for m in members]),
+                    self.fleet.buckets, self.fleet.vocab)
+                for m, sig in zip(members, sigs):
+                    m.subsamples = window_data[m.stream_id]
+                    m.sig = sig
+                    self.sig_index.refresh_sig(m.stream_id, m.sig)
             self.grouper.update_grouping(self.jobs, t)
 
         # metrics

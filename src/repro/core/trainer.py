@@ -71,6 +71,7 @@ class RetrainJob:
         self.engine = engine
         self.members: List[Request] = []
         self.pool: List[np.ndarray] = []      # (B,S) token arrays
+        self._pool_src: List[Optional[str]] = []   # stream per pool entry
         self.soft_pool: List[np.ndarray] = [] # optional teacher soft labels
         self.micro_steps = micro_steps
         self.batch = batch
@@ -90,9 +91,21 @@ class RetrainJob:
         self.members.append(req)
         if req.train_data is not None:
             self.pool.append(np.asarray(req.train_data))
+            self._pool_src.append(req.stream_id)
 
     def remove_member(self, stream_id: str):
         self.members = [m for m in self.members if m.stream_id != stream_id]
+
+    def purge_stream_data(self, stream_id: str):
+        """Drop a stream's pooled training data. Used when a camera
+        LEAVES the fleet (churn): the group must stop doing SGD on a
+        distribution no live member has. Eviction/regrouping does NOT
+        purge — an evicted member's data contributed while it was a
+        member (seed semantics, pinned by the golden traces)."""
+        keep = [i for i, src in enumerate(self._pool_src)
+                if src != stream_id]
+        self.pool = [self.pool[i] for i in keep]
+        self._pool_src = [self._pool_src[i] for i in keep]
 
     def eval_on(self, samples) -> float:
         return self.engine.accuracy(self.state["params"], samples)
@@ -120,8 +133,12 @@ class RetrainJob:
         self.gpu_time += 1
 
     # -- data plane -------------------------------------------------------------
-    def ingest(self, tokens: np.ndarray):
-        """New window data from a member's transmission."""
+    def ingest(self, tokens: np.ndarray, stream_id: Optional[str] = None):
+        """New window data from a member's transmission. `stream_id`
+        attributes the entry so churn can purge a departed camera's
+        data (purge_stream_data)."""
         self.pool.append(np.asarray(tokens))
+        self._pool_src.append(stream_id)
         if len(self.pool) > 64:       # sliding data window
             self.pool = self.pool[-64:]
+            self._pool_src = self._pool_src[-64:]

@@ -50,9 +50,13 @@ class ProfileTable:
         self._acc[(budget_level, cfg_idx)] = acc
 
     def best(self, budget_level: int, token_budget: Optional[int] = None
-             ) -> SamplingConfig:
+             ) -> Optional[SamplingConfig]:
         """Best profiled config at this budget level whose token volume
-        fits `token_budget` (if given)."""
+        fits `token_budget` (if given). Returns None when the table
+        holds no configs at all (max() over an empty candidate AND
+        fallback set used to raise ValueError)."""
+        if not self.configs:
+            return None
         cands = []
         for (lvl, idx), acc in self._acc.items():
             if lvl != budget_level:
@@ -91,6 +95,8 @@ class TransmissionController:
                achieved_bandwidth: float, window_seconds: float
                ) -> TransmissionDecision:
         cfg = self.table.best(gpu_budget_level, token_budget)
+        if cfg is None:              # empty profile table: transmit nothing
+            cfg = SamplingConfig(rate=0, resolution=0)
         scaled_rate = cfg.rate / max(1, n_members)
         alpha = p_share / max(1, n_members)
         # tokens deliverable within the achieved bandwidth

@@ -1,0 +1,223 @@
+"""Deterministic fleet scenario library — the workload zoo.
+
+Ekya/RECL-class systems are evaluated across diverse drift patterns,
+not one synthetic fleet shape. Each generator here builds a seeded,
+fully deterministic `FleetScenario` on top of `DomainBank`/`Region`
+(same substrate as `make_fleet`), so every benchmark, golden trace, and
+regression test can name a workload and get the identical fleet back:
+
+  * drift_wave            — a domain switch sweeps region by region
+                            across space (rolling front, staggered in
+                            time like a weather system).
+  * diurnal               — day/night domain recurrence; every region
+                            oscillates between two domains with a fixed
+                            period (drift that *repeats*).
+  * camera_churn          — streams join and leave mid-run (`churn`
+                            events applied by the scenario runner at
+                            window boundaries).
+  * flash_crowd           — at one instant every region snaps to the
+                            SAME domain (a city-wide event): maximal
+                            cross-camera correlation.
+  * bandwidth_contention  — one drift event under a tight shared
+                            bottleneck and heterogeneous per-camera
+                            uplink caps.
+
+A scenario is `make_fleet`-compatible: `.bank`/`.streams` slot in
+anywhere `make_fleet`'s return does, and `shared_bandwidth` /
+`local_caps` / `churn` carry the scenario's resource shape to the
+controller (see repro.testing.trace.run_scenario and
+benchmarks/bench_scalability.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.data.streams import DomainBank, Region, Stream
+
+
+@dataclasses.dataclass
+class ChurnEvent:
+    """Fleet membership change applied BEFORE running window `window`."""
+    window: int
+    kind: str                      # "join" | "leave"
+    stream_id: str
+    stream: Optional[Stream] = None    # populated for joins
+
+
+@dataclasses.dataclass
+class FleetScenario:
+    name: str
+    bank: DomainBank
+    streams: List[Stream]          # fleet at t=0
+    windows: int                   # suggested run length
+    seed: int
+    window_seconds: float = 10.0
+    shared_bandwidth: float = 1e9
+    local_caps: Optional[Dict[str, float]] = None
+    churn: List[ChurnEvent] = dataclasses.field(default_factory=list)
+
+    def events_at(self, window: int) -> List[ChurnEvent]:
+        return [e for e in self.churn if e.window == window]
+
+
+def _place_streams(bank: DomainBank, region: Region, center,
+                   n: int, rng: np.random.Generator, *, prefix: str,
+                   spread: float = 10.0, seed: int = 0) -> List[Stream]:
+    out = []
+    for s in range(n):
+        loc = (center[0] + rng.uniform(-spread, spread),
+               center[1] + rng.uniform(-spread, spread))
+        out.append(Stream(f"{prefix}_{s}", bank, region, loc,
+                          lag=rng.uniform(0.0, 2.0), seed=seed + s))
+    return out
+
+
+def _mk(bank_seed: int, vocab: int, num_domains: int, dim: int
+        ) -> Tuple[DomainBank, np.random.Generator]:
+    bank = DomainBank(vocab, num_domains, dim=dim, seed=bank_seed)
+    return bank, np.random.default_rng(bank_seed + 1)
+
+
+def drift_wave(*, regions: int = 4, streams_per_region: int = 2,
+               vocab: int = 64, num_domains: int = 6, dim: int = 4,
+               wave_start: float = 5.0, wave_step: float = 10.0,
+               windows: int = 8, seed: int = 0) -> FleetScenario:
+    """A drift front sweeps across regions in spatial order: region r
+    switches domain at wave_start + r * wave_step. Nearby regions drift
+    at nearby times — the cross-camera-correlation premise with a
+    *temporal* gradient (grouping must track the moving front)."""
+    bank, rng = _mk(seed, vocab, num_domains, dim)
+    streams: List[Stream] = []
+    for r in range(regions):
+        doms = rng.permutation(num_domains)
+        sched = [(0.0, int(doms[0])),
+                 (wave_start + r * wave_step, int(doms[1]))]
+        region = Region(f"region{r}", sched)
+        streams += _place_streams(bank, region, (r * 1000.0, 0.0),
+                                  streams_per_region, rng,
+                                  prefix=f"cam{r}", seed=seed + 10 * r)
+    return FleetScenario("drift_wave", bank, streams, windows, seed)
+
+
+def diurnal(*, regions: int = 2, streams_per_region: int = 3,
+            vocab: int = 64, num_domains: int = 6, dim: int = 4,
+            period: float = 40.0, windows: int = 10,
+            seed: int = 0) -> FleetScenario:
+    """Day/night recurrence: each region alternates between two domains
+    every period/2 for the whole horizon. Drift the fleet has seen
+    before — the regime where model reuse and stable grouping pay."""
+    bank, rng = _mk(seed, vocab, num_domains, dim)
+    horizon = windows * 10.0 + period
+    streams: List[Stream] = []
+    for r in range(regions):
+        doms = rng.permutation(num_domains)
+        day, night = int(doms[0]), int(doms[1])
+        sched = [(0.0, day)]
+        t, cur = period / 2.0, night
+        while t < horizon:
+            sched.append((t, cur))
+            cur = night if cur == day else day
+            t += period / 2.0
+        region = Region(f"region{r}", sched)
+        streams += _place_streams(bank, region, (r * 1000.0, 0.0),
+                                  streams_per_region, rng,
+                                  prefix=f"cam{r}", seed=seed + 10 * r)
+    return FleetScenario("diurnal", bank, streams, windows, seed)
+
+
+def camera_churn(*, regions: int = 2, streams_per_region: int = 2,
+                 vocab: int = 64, num_domains: int = 6, dim: int = 4,
+                 switch_time: float = 10.0, join_window: int = 2,
+                 leave_window: int = 5, windows: int = 8,
+                 seed: int = 0) -> FleetScenario:
+    """Streams join and leave mid-run: one extra camera per region
+    comes online at `join_window`, and the first camera of region 0
+    goes dark at `leave_window`. Exercises detector-row / index /
+    job-membership churn paths end to end."""
+    bank, rng = _mk(seed, vocab, num_domains, dim)
+    streams: List[Stream] = []
+    churn: List[ChurnEvent] = []
+    for r in range(regions):
+        doms = rng.permutation(num_domains)
+        sched = [(0.0, int(doms[0])),
+                 (switch_time + 5.0 * r, int(doms[1]))]
+        region = Region(f"region{r}", sched)
+        streams += _place_streams(bank, region, (r * 1000.0, 0.0),
+                                  streams_per_region, rng,
+                                  prefix=f"cam{r}", seed=seed + 10 * r)
+        late = _place_streams(bank, region, (r * 1000.0, 0.0), 1, rng,
+                              prefix=f"late{r}", seed=seed + 500 + r)[0]
+        churn.append(ChurnEvent(window=join_window, kind="join",
+                                stream_id=late.stream_id, stream=late))
+    churn.append(ChurnEvent(window=leave_window, kind="leave",
+                            stream_id=streams[0].stream_id))
+    return FleetScenario("camera_churn", bank, streams, windows, seed,
+                         churn=churn)
+
+
+def flash_crowd(*, regions: int = 3, streams_per_region: int = 2,
+                vocab: int = 64, num_domains: int = 6, dim: int = 4,
+                flash_time: float = 15.0, windows: int = 8,
+                seed: int = 0) -> FleetScenario:
+    """At `flash_time` every region snaps to one shared event domain
+    (city-wide incident). All cameras drift simultaneously and
+    identically — the best case for group retraining, the worst case
+    for per-stream budgets."""
+    bank, rng = _mk(seed, vocab, num_domains, dim)
+    event_dom = int(rng.integers(0, num_domains))
+    streams: List[Stream] = []
+    for r in range(regions):
+        base = int((event_dom + 1 + r) % num_domains)
+        region = Region(f"region{r}", [(0.0, base),
+                                       (flash_time, event_dom)])
+        streams += _place_streams(bank, region, (r * 1000.0, 0.0),
+                                  streams_per_region, rng,
+                                  prefix=f"cam{r}", seed=seed + 10 * r)
+    return FleetScenario("flash_crowd", bank, streams, windows, seed)
+
+
+def bandwidth_contention(*, regions: int = 2, streams_per_region: int = 4,
+                         vocab: int = 64, num_domains: int = 6,
+                         dim: int = 4, switch_time: float = 10.0,
+                         shared_bandwidth: float = 48.0,
+                         cap_range: Tuple[float, float] = (4.0, 24.0),
+                         windows: int = 8, seed: int = 0) -> FleetScenario:
+    """One drift event under a tight shared bottleneck plus seeded
+    heterogeneous per-camera uplink caps — the regime where GAIMD's
+    GPU-share-proportional bandwidth (vs equal share) matters."""
+    bank, rng = _mk(seed, vocab, num_domains, dim)
+    streams: List[Stream] = []
+    for r in range(regions):
+        doms = rng.permutation(num_domains)
+        sched = [(0.0, int(doms[0])),
+                 (switch_time + 5.0 * r, int(doms[1]))]
+        region = Region(f"region{r}", sched)
+        streams += _place_streams(bank, region, (r * 1000.0, 0.0),
+                                  streams_per_region, rng,
+                                  prefix=f"cam{r}", seed=seed + 10 * r)
+    caps = {s.stream_id: float(rng.uniform(*cap_range)) for s in streams}
+    return FleetScenario("bandwidth_contention", bank, streams, windows,
+                         seed, shared_bandwidth=shared_bandwidth,
+                         local_caps=caps)
+
+
+SCENARIOS: Dict[str, Callable[..., FleetScenario]] = {
+    "drift_wave": drift_wave,
+    "diurnal": diurnal,
+    "camera_churn": camera_churn,
+    "flash_crowd": flash_crowd,
+    "bandwidth_contention": bandwidth_contention,
+}
+
+
+def build_scenario(name: str, *, seed: int = 0, **kw) -> FleetScenario:
+    """Build a named scenario (see SCENARIOS) with overrides."""
+    try:
+        gen = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"have {sorted(SCENARIOS)}") from None
+    return gen(seed=seed, **kw)

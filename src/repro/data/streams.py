@@ -56,8 +56,11 @@ class DomainBank:
         for s in range(seq_len):
             out[:, s] = tok
             u = rng.random(batch)
-            tok = np.array([np.searchsorted(cum[t], x) for t, x in
-                            zip(tok, u)])
+            # vectorized per-row searchsorted: left insertion point ==
+            # count of cum-cells strictly below the draw (data
+            # generation dominates fleet benchmarks at 10k streams; the
+            # per-row Python np.searchsorted loop was the hot spot)
+            tok = (cum[tok] < u[:, None]).sum(axis=1)
             tok = np.minimum(tok, self.vocab - 1)
         return out
 

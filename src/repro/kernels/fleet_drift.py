@@ -1,0 +1,148 @@
+"""Fused fleet drift detection as a Pallas TPU kernel.
+
+The hot loop of ECCO's window step 1: every stream's live window of
+tokens becomes a bucket histogram, and that histogram is scored with
+Jensen-Shannon divergence against the stream's own reference histogram
+(core.drift.DriftDetector does this one stream at a time in Python).
+This kernel fuses both stages for the whole fleet in one call:
+
+    tokens (N, T) int32, ref (N, B)  ->  scores (N,), live hists (N, B)
+
+Design:
+  * Grid (nN,), parallel; each cell owns a (TN, T) token tile and the
+    matching (TN, B) reference tile.
+  * Histogram: bucket indices via the same clip/modulo rule as
+    drift.token_histogram, then a one-hot compare against a
+    broadcasted_iota over buckets summed across T (Pallas has no
+    scatter-add; the (TN, T, B) broadcast stays comfortably in VMEM at
+    drift shapes: T ~ hundreds, B ~ 64).
+  * JS: live rows normalized to probabilities, then the eps-shift +
+    renormalize + 0.5*(KL(p||m) + KL(q||m)) sequence of
+    drift.js_divergence, rowwise against the reference tile. All fp32.
+  * N is zero-padded to a tile multiple; padded token rows histogram to
+    a delta at bucket 0 and padded ref rows normalize to eps-uniform —
+    finite everywhere — and are sliced away.
+
+`fleet_drift_xla` is the chunked pure-jnp twin (lax.map over stream
+blocks, scatter-add histogramming) used on non-TPU backends. Validated
+in interpret mode against ref.fleet_drift_ref; exactness-critical
+consumers (FleetDriftDetector's trigger decisions) combine these fp32
+scores with a float64 near-threshold rescore — see core/drift.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+F32 = jnp.float32
+
+
+def _bucket_idx(toks, buckets: int, vocab: int):
+    """Bucket index per token — same rule as drift.token_histogram:
+    clip((t * buckets) // vocab) when a vocab is known (tokens at
+    exactly `vocab` land in the top bucket, not bucket `buckets`),
+    modulo hashing otherwise (vocab == 0)."""
+    if vocab:
+        return jnp.clip((toks * buckets) // vocab, 0, buckets - 1)
+    return toks % buckets
+
+
+def _normalize(x, eps: float):
+    x = x.astype(F32) + eps
+    return x / jnp.sum(x, axis=-1, keepdims=True)
+
+
+def _rowwise_js(h, ref, eps: float):
+    p = _normalize(h, eps)
+    q = _normalize(ref, eps)
+    m = 0.5 * (p + q)
+    kl_pm = jnp.sum(p * jnp.log(p / m), axis=-1)
+    kl_qm = jnp.sum(q * jnp.log(q / m), axis=-1)
+    return 0.5 * (kl_pm + kl_qm)
+
+
+def _fleet_drift_kernel(tok_ref, ref_ref, score_ref, hist_ref, *,
+                        buckets: int, vocab: int, eps: float):
+    toks = tok_ref[...]                                  # (TN, T) int32
+    idx = _bucket_idx(toks, buckets, vocab)
+    b = jax.lax.broadcasted_iota(jnp.int32,
+                                 (*idx.shape, buckets), 2)
+    h = jnp.sum((idx[:, :, None] == b).astype(F32), axis=1)   # (TN, B)
+    s = jnp.sum(h, axis=-1, keepdims=True)               # == T per row
+    h = h / jnp.maximum(s, 1.0)
+    hist_ref[...] = h
+    score_ref[...] = _rowwise_js(h, ref_ref[...], eps)[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("buckets", "vocab", "eps", "n_block",
+                                    "interpret"))
+def fleet_drift(tokens, ref, *, buckets: int, vocab: int = 0,
+                eps: float = 1e-12, n_block: int = 128,
+                interpret: bool = False):
+    """tokens: (N, T) int; ref: (N, buckets) nonneg histograms.
+    Returns (scores (N,) fp32, live hists (N, buckets) fp32)."""
+    N, T = tokens.shape
+    if N == 0:
+        return jnp.zeros((0,), F32), jnp.zeros((0, buckets), F32)
+    tokens = tokens.astype(jnp.int32)
+    ref = ref.astype(F32)
+    TN = min(n_block, max(8, N))
+    pn = (-N) % TN
+    if pn:
+        tokens = jnp.pad(tokens, ((0, pn), (0, 0)))
+        ref = jnp.pad(ref, ((0, pn), (0, 0)))
+
+    scores, hists = pl.pallas_call(
+        functools.partial(_fleet_drift_kernel, buckets=buckets,
+                          vocab=vocab, eps=eps),
+        grid=((N + pn) // TN,),
+        in_specs=[pl.BlockSpec((TN, T), lambda i: (i, 0)),
+                  pl.BlockSpec((TN, buckets), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TN, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((TN, buckets), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((N + pn, 1), F32),
+                   jax.ShapeDtypeStruct((N + pn, buckets), F32)],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(tokens, ref)
+    return scores[:N, 0], hists[:N]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("buckets", "vocab", "eps", "block"))
+def fleet_drift_xla(tokens, ref, *, buckets: int, vocab: int = 0,
+                    eps: float = 1e-12, block: int = 1024):
+    """Chunked pure-jnp form: scatter-add histograms per stream block,
+    identical math, (block, buckets) peak memory per step."""
+    N, T = tokens.shape
+    if N == 0:
+        return jnp.zeros((0,), F32), jnp.zeros((0, buckets), F32)
+    tokens = tokens.astype(jnp.int32)
+    ref = ref.astype(F32)
+    TB = min(block, N)
+    pad = (-N) % TB
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+        ref = jnp.pad(ref, ((0, pad), (0, 0)), constant_values=1.0)
+    tb = tokens.reshape(-1, TB, T)
+    rb = ref.reshape(-1, TB, buckets)
+
+    def one(args):
+        toks, r = args
+        idx = _bucket_idx(toks, buckets, vocab)
+        flat = (idx + buckets * jnp.arange(TB, dtype=jnp.int32)[:, None])
+        h = jnp.zeros((TB * buckets,), F32).at[flat.reshape(-1)].add(1.0)
+        h = h.reshape(TB, buckets)
+        s = jnp.sum(h, axis=-1, keepdims=True)
+        h = h / jnp.maximum(s, 1.0)
+        return _rowwise_js(h, r, eps), h
+
+    scores, hists = jax.lax.map(one, (tb, rb))
+    return scores.reshape(-1)[:N], hists.reshape(-1, buckets)[:N]

@@ -15,6 +15,8 @@ import jax
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fleet_drift import fleet_drift as _fdrift_pallas
+from repro.kernels.fleet_drift import fleet_drift_xla as _fdrift_xla
 from repro.kernels.mlstm_scan import mlstm_scan as _mlstm_pallas
 from repro.kernels.pairwise_js import pairwise_js as _pjs_pallas
 from repro.kernels.pairwise_js import pairwise_js_xla as _pjs_xla
@@ -60,6 +62,26 @@ def pairwise_js(p, q, *, eps: float = 1e-12, impl: str = "auto"):
     if impl in ("pallas", "interpret"):
         return _pjs_pallas(p, q, eps=eps, interpret=(impl == "interpret"))
     return _pjs_xla(p, q, eps=eps)
+
+
+def fleet_drift(tokens, ref, *, buckets: int, vocab: int = 0,
+                eps: float = 1e-12, impl: str = "auto"):
+    """Fused fleet drift scoring. tokens: (N, T) int; ref: (N, buckets).
+
+    One call histograms every stream's live window and scores it with
+    Jensen-Shannon divergence against that stream's reference — the
+    batched replacement for the controller's per-stream
+    token_histogram + js_divergence loop (core.drift.FleetDriftDetector).
+    Returns (scores (N,) fp32, live hists (N, buckets) fp32).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.fleet_drift_ref(tokens, ref, buckets=buckets,
+                                    vocab=vocab, eps=eps)
+    if impl in ("pallas", "interpret"):
+        return _fdrift_pallas(tokens, ref, buckets=buckets, vocab=vocab,
+                              eps=eps, interpret=(impl == "interpret"))
+    return _fdrift_xla(tokens, ref, buckets=buckets, vocab=vocab, eps=eps)
 
 
 def mlstm(q, k, v, igate, fgate, *, chunk: int = 128, impl: str = "auto"):

@@ -71,6 +71,42 @@ def pairwise_js_ref(p, q, *, eps: float = 1e-12):
 
 
 # ---------------------------------------------------------------------------
+# Fleet drift (fused histogram + rowwise JS) oracle
+# ---------------------------------------------------------------------------
+def fleet_drift_ref(tokens, ref, *, buckets: int, vocab: int = 0,
+                    eps: float = 1e-12):
+    """Materialized fused drift scoring.
+
+    tokens: (N, T) int; ref: (N, buckets) nonneg reference histograms.
+    Per stream i: histogram tokens[i] over `buckets` (clip rule of
+    drift.token_histogram when vocab > 0, modulo hashing otherwise),
+    normalize, and score JS(hist_i, ref_i) with the eps-shift +
+    renormalize of drift.js_divergence. Returns (scores (N,) fp32,
+    hists (N, buckets) fp32).
+    """
+    t = jnp.asarray(tokens, jnp.int32)
+    N, _ = t.shape
+    if N == 0:
+        return jnp.zeros((0,), F32), jnp.zeros((0, buckets), F32)
+    if vocab:
+        idx = jnp.clip((t * buckets) // vocab, 0, buckets - 1)
+    else:
+        idx = t % buckets
+    onehot = jax.nn.one_hot(idx, buckets, dtype=F32)     # (N, T, B)
+    h = jnp.sum(onehot, axis=1)
+    s = jnp.sum(h, axis=-1, keepdims=True)
+    h = h / jnp.maximum(s, 1.0)
+    p = h.astype(F32) + eps
+    q = jnp.asarray(ref, F32) + eps
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    q = q / jnp.sum(q, axis=-1, keepdims=True)
+    m = 0.5 * (p + q)
+    kl_pm = jnp.sum(p * jnp.log(p / m), axis=-1)
+    kl_qm = jnp.sum(q * jnp.log(q / m), axis=-1)
+    return 0.5 * (kl_pm + kl_qm), h
+
+
+# ---------------------------------------------------------------------------
 # mLSTM oracle — strictly sequential recurrence (arXiv:2405.04517 eq. 19-27)
 # ---------------------------------------------------------------------------
 def mlstm_recurrent(q, k, v, igate, fgate, *, init_state=None,

@@ -1,0 +1,2 @@
+"""Testing utilities: scenario runners and golden-trace regression
+harness (repro.testing.trace)."""

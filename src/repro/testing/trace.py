@@ -1,0 +1,242 @@
+"""Golden-trace harness: run a scenario, serialize a compact behavior
+trace, compare against checked-in goldens.
+
+A trace captures, per window: every stream's drift score, the group
+memberships, the GPU shares, the realized bandwidth, the per-stream
+accuracy, and the grouping events (join/new/evict) — the full observable
+decision surface of the controller. Golden JSON files under
+tests/golden/ pin this surface for one fixed-seed scenario per
+framework, so silent behavior drift in grouping / allocation /
+transmission fails tier-1 instead of shipping.
+
+Job ids are canonicalized ("g0", "g1", ... in order of first
+appearance): `RetrainJob` draws ids from a process-global counter, so
+raw ids depend on what ran before in the process.
+
+Comparison policy (`compare`): structure — window count, stream sets,
+group memberships, grouping events — must match EXACTLY; float fields
+(drift scores, shares, bandwidth, accuracy) match within per-field
+tolerances, because model-training floats wobble across jax/XLA builds
+while the decisions they drive are pinned by the structural fields.
+
+Regenerate after an intentional behavior change:
+
+    PYTHONPATH=src python -m repro.testing.trace --regen tests/golden
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import smoke_config
+from repro.core.baselines import FRAMEWORKS
+from repro.core.controller import ControllerConfig
+from repro.core.trainer import SharedEngine
+from repro.data.scenarios import FleetScenario, build_scenario
+
+
+def make_engine_for(scenario: FleetScenario, arch: str = "olmo-1b"
+                    ) -> SharedEngine:
+    cfg = dataclasses.replace(smoke_config(arch),
+                              vocab_size=scenario.bank.vocab)
+    return SharedEngine(cfg)
+
+
+def run_scenario(framework: str, scenario: FleetScenario, *,
+                 engine: Optional[SharedEngine] = None,
+                 windows: Optional[int] = None, seed: int = 0,
+                 trace: Optional[dict] = None, **cc_overrides):
+    """Run `framework` over `scenario` (churn events applied at window
+    boundaries). Pass `trace={}` to also fill it with the golden-trace
+    record. Returns the controller.
+
+    The scenario is deep-copied first (streams carry live rng state
+    and churn events carry Stream objects the controller consumes), so
+    one built scenario can be run repeatedly — under several
+    frameworks, say — and every run sees the identical fleet."""
+    engine = engine or make_engine_for(scenario)
+    scenario = copy.deepcopy(scenario)      # bank is shared via memo
+    windows = scenario.windows if windows is None else windows
+    cc_kw = dict(window_seconds=scenario.window_seconds,
+                 shared_bandwidth=scenario.shared_bandwidth,
+                 local_caps=scenario.local_caps)
+    cc_kw.update(cc_overrides)
+    cc = ControllerConfig(**cc_kw)
+    ctl = FRAMEWORKS[framework](engine, list(scenario.streams), cc,
+                                seed=seed)
+    ctl.warmup()
+    if trace is not None:
+        trace.update({"meta": {"scenario": scenario.name,
+                               "scenario_seed": scenario.seed,
+                               "framework": framework, "seed": seed,
+                               "windows": windows},
+                      "windows": []})
+    jobname: Dict[str, str] = {}
+    for w in range(windows):
+        for ev in scenario.events_at(w):
+            if ev.kind == "join" and ev.stream is not None:
+                ctl.add_stream(ev.stream)
+            elif ev.kind == "leave":
+                ctl.remove_stream(ev.stream_id)
+        n_events = len(ctl.grouper.events)
+        wm = ctl.run_window()
+        if trace is not None:
+            trace["windows"].append(_window_record(
+                ctl, wm, ctl.grouper.events[n_events:], jobname))
+    return ctl
+
+
+# -- trace records -----------------------------------------------------------
+def _canon(jobname: Dict[str, str], job_id: str) -> str:
+    if job_id not in jobname:
+        jobname[job_id] = f"g{len(jobname)}"
+    return jobname[job_id]
+
+
+def _round(x, nd: int):
+    v = float(x)
+    return None if math.isnan(v) else round(v, nd)
+
+
+def _window_record(ctl, wm, events, jobname: Dict[str, str]) -> dict:
+    drift = {sid: _round(ctl.fleet.score(sid), 6)
+             for sid in sorted(ctl.fleet.stream_ids)}
+    groups = {_canon(jobname, jid): sorted(members)
+              for jid, members in wm.groups.items()}
+    shares = {_canon(jobname, jid): _round(v, 6)
+              for jid, v in wm.shares.items()}
+    bw = {sid: _round(v, 4) for sid, v in sorted(wm.bandwidth.items())}
+    acc = {sid: _round(v, 4) for sid, v in sorted(wm.per_stream_acc.items())}
+    evs = [{"kind": e["kind"], "stream": e["stream"],
+            "job": _canon(jobname, e["job"])} for e in events]
+    return {"t": wm.t, "drift": drift, "groups": groups, "shares": shares,
+            "bandwidth": bw, "acc": acc, "events": evs}
+
+
+def save_trace(trace: dict, path: str):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(trace, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+# -- comparison --------------------------------------------------------------
+def _cmp_floats(diffs, where, a: dict, b: dict, atol: float,
+                rtol: float = 0.0):
+    if set(a) != set(b):
+        diffs.append(f"{where}: key sets differ {sorted(a)} vs {sorted(b)}")
+        return
+    for k in a:
+        x, y = a[k], b[k]
+        if (x is None) != (y is None):
+            diffs.append(f"{where}[{k}]: {x} vs {y}")
+        elif x is not None and abs(x - y) > atol + rtol * abs(y):
+            diffs.append(f"{where}[{k}]: {x} vs {y}")
+
+
+def compare(got: dict, want: dict, *, drift_atol: float = 1e-4,
+            share_atol: float = 5e-3, bw_rtol: float = 5e-3,
+            acc_atol: float = 0.08) -> List[str]:
+    """Diff two traces. Returns [] when `got` matches `want`; otherwise
+    human-readable difference lines. Structure is exact; floats are
+    toleranced (see module docstring)."""
+    diffs: List[str] = []
+    if got.get("meta") != want.get("meta"):
+        diffs.append(f"meta: {got.get('meta')} vs {want.get('meta')}")
+    gw, ww = got.get("windows", []), want.get("windows", [])
+    if len(gw) != len(ww):
+        diffs.append(f"window count: {len(gw)} vs {len(ww)}")
+    for i, (g, w) in enumerate(zip(gw, ww)):
+        at = f"window[{i}]"
+        if g["t"] != w["t"]:
+            diffs.append(f"{at}.t: {g['t']} vs {w['t']}")
+        if g["groups"] != w["groups"]:
+            diffs.append(f"{at}.groups: {g['groups']} vs {w['groups']}")
+        if g["events"] != w["events"]:
+            diffs.append(f"{at}.events: {g['events']} vs {w['events']}")
+        _cmp_floats(diffs, f"{at}.drift", g["drift"], w["drift"],
+                    drift_atol)
+        _cmp_floats(diffs, f"{at}.shares", g["shares"], w["shares"],
+                    share_atol)
+        _cmp_floats(diffs, f"{at}.bandwidth", g["bandwidth"],
+                    w["bandwidth"], 1e-6, bw_rtol)
+        _cmp_floats(diffs, f"{at}.acc", g["acc"], w["acc"], acc_atol)
+    return diffs
+
+
+# -- golden registry ---------------------------------------------------------
+# One fixed-seed scenario run per framework. Sized for tier-1: a tiny
+# drift_wave fleet (2 regions x 2 streams), 3 windows, reduced training.
+GOLDEN_SCENARIO = dict(name="drift_wave", seed=0, regions=2,
+                       streams_per_region=2, wave_start=5.0,
+                       wave_step=10.0, windows=3)
+GOLDEN_CONTROLLER = dict(window_micro=4, micro_steps=2, train_batch=8,
+                         sample_rate=8, p_drop=0.5, shared_bandwidth=96.0)
+GOLDEN_FRAMEWORKS = ("ecco", "naive", "ekya", "recl")
+
+
+def golden_scenario() -> FleetScenario:
+    kw = dict(GOLDEN_SCENARIO)
+    return build_scenario(kw.pop("name"), **kw)
+
+
+def golden_trace(framework: str, engine: Optional[SharedEngine] = None
+                 ) -> dict:
+    scenario = golden_scenario()
+    trace: dict = {}
+    run_scenario(framework, scenario, engine=engine, seed=0, trace=trace,
+                 **GOLDEN_CONTROLLER)
+    return trace
+
+
+def golden_path(dirpath: str, framework: str) -> str:
+    return os.path.join(dirpath, f"trace_{framework}.json")
+
+
+def regenerate(dirpath: str, frameworks=GOLDEN_FRAMEWORKS) -> List[str]:
+    scenario = golden_scenario()
+    engine = make_engine_for(scenario)
+    paths = []
+    for fw in frameworks:
+        tr = golden_trace(fw, engine=engine)
+        p = golden_path(dirpath, fw)
+        save_trace(tr, p)
+        paths.append(p)
+    return paths
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--regen", metavar="DIR",
+                    help="regenerate golden traces into DIR")
+    ap.add_argument("--check", metavar="DIR",
+                    help="re-run and diff against goldens in DIR")
+    args = ap.parse_args(argv)
+    if args.regen:
+        for p in regenerate(args.regen):
+            print(f"wrote {p}")
+    if args.check:
+        bad = 0
+        for fw in GOLDEN_FRAMEWORKS:
+            diffs = compare(golden_trace(fw),
+                            load_trace(golden_path(args.check, fw)))
+            status = "ok" if not diffs else f"{len(diffs)} diffs"
+            print(f"{fw}: {status}")
+            for d in diffs:
+                print(f"  {d}")
+            bad += bool(diffs)
+        raise SystemExit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Fleet drift detection: fused kernel sweeps against the oracle, and
+FleetDriftDetector parity with the scalar per-stream DriftDetector —
+bit-identical scores on the exact path, bit-identical trigger decisions
+(and triggered-stream scores) under every kernel dispatch mode."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.drift import (DriftDetector, FleetDriftDetector,
+                              batch_token_histogram, js_divergence,
+                              js_divergence_rows, token_histogram)
+from repro.kernels import ops
+
+ALL_IMPLS = ["exact", "pallas", "interpret", "xla", "ref"]
+KERNEL_IMPLS = ["pallas", "interpret", "xla", "ref"]
+
+
+def _skip_off_tpu(impl):
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        pytest.skip("pallas compiled mode needs a TPU")
+
+
+# ---------------------------------------------------------------------------
+# kernel sweep: fused histogram + JS vs the materialized oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("N,T,B,vocab", [
+    (1, 32, 64, 64),       # single stream
+    (5, 64, 64, 64),
+    (33, 48, 64, 64),      # pad over tile fraction
+    (100, 16, 128, 256),   # vocab > buckets
+    (17, 64, 64, 0),       # modulo-hash path (no vocab)
+])
+@pytest.mark.parametrize("impl", ["interpret", "xla"])
+def test_fleet_drift_kernel_sweep(N, T, B, vocab, impl):
+    rng = np.random.default_rng(0)
+    hi = (vocab or B) + 1           # include token == vocab boundary
+    toks = rng.integers(0, hi, size=(N, T))
+    ref = rng.random((N, B)).astype(np.float32)
+    ref[0] = 0.0                    # zero-sum reference histogram
+    got_s, got_h = map(np.asarray, ops.fleet_drift(
+        toks, ref, buckets=B, vocab=vocab, impl=impl))
+    want_s, want_h = map(np.asarray, ops.fleet_drift(
+        toks, ref, buckets=B, vocab=vocab, impl="ref"))
+    assert got_s.shape == (N,) and got_h.shape == (N, B)
+    assert np.isfinite(got_s).all()
+    np.testing.assert_allclose(got_s, want_s, atol=1e-5, rtol=0)
+    np.testing.assert_allclose(got_h, want_h, atol=1e-6, rtol=0)
+
+
+@pytest.mark.parametrize("impl", ["interpret", "xla", "ref"])
+def test_fleet_drift_empty_fleet(impl):
+    s, h = ops.fleet_drift(np.zeros((0, 8), np.int64),
+                           np.zeros((0, 64), np.float32),
+                           buckets=64, vocab=64, impl=impl)
+    assert np.asarray(s).shape == (0,)
+    assert np.asarray(h).shape == (0, 64)
+
+
+@pytest.mark.parametrize("impl", ["interpret", "xla", "ref"])
+def test_fleet_drift_matches_scalar_js(impl):
+    """Fused kernel row i == js_divergence(token_histogram(row i), ref i)
+    to fp32 accuracy, including the token == vocab clipping edge."""
+    rng = np.random.default_rng(1)
+    N, T, B, V = 9, 40, 64, 64
+    toks = rng.integers(0, V + 1, size=(N, T))
+    ref = rng.random((N, B))
+    got = np.asarray(ops.fleet_drift(toks, ref.astype(np.float32),
+                                     buckets=B, vocab=V, impl=impl)[0])
+    for i in range(N):
+        want = js_divergence(token_histogram(toks[i], B, V), ref[i])
+        assert abs(got[i] - want) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# exact vectorized primitives: bit-identical to the scalar loop
+# ---------------------------------------------------------------------------
+def test_batch_token_histogram_bit_identical():
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, 65, size=(13, 4, 16))     # includes 64 == vocab
+    for vocab in (64, None):
+        got = batch_token_histogram(toks, 32, vocab)
+        for i in range(13):
+            want = token_histogram(toks[i], 32, vocab)
+            assert (got[i] == want).all()
+    # zero-sum row: no tokens -> unnormalized zeros, same as scalar
+    empty = batch_token_histogram(np.zeros((2, 0), np.int64), 16, 64)
+    assert (empty == token_histogram([], 16, 64)).all()
+
+
+def test_js_divergence_rows_bit_identical():
+    rng = np.random.default_rng(3)
+    p = rng.random((50, 64))
+    q = rng.random((50, 64))
+    q[7] = 0.0                                       # zero-sum histogram
+    got = js_divergence_rows(p, q)
+    want = np.array([js_divergence(p[i], q[i]) for i in range(50)])
+    assert (got == want).all()
+
+
+# ---------------------------------------------------------------------------
+# FleetDriftDetector parity with per-stream DriftDetector
+# ---------------------------------------------------------------------------
+def _fleet_windows(seed=0, n=6, windows=4, batch=8, seq=32, vocab=64):
+    """Deterministic multi-window token streams with a drift event."""
+    from repro.data.streams import make_fleet
+    _, streams = make_fleet(vocab=vocab, regions=2, streams_per_region=n // 2,
+                            dim=4, switch_times=(10.0,), seed=seed)
+    ids = [s.stream_id for s in streams]
+    wins = [np.stack([s.sample(10.0 * w, batch, seq) for s in streams])
+            for w in range(windows)]
+    return ids, wins
+
+
+@pytest.mark.parametrize("impl", ALL_IMPLS)
+def test_fleet_detector_matches_scalar(impl):
+    """The batched detector reproduces the scalar per-stream loop:
+    identical trigger decisions every window in every dispatch mode,
+    bit-identical scores on the exact path, and bit-identical scores
+    for every potentially-triggered stream on the kernel paths (the
+    float64 near-threshold rescore)."""
+    _skip_off_tpu(impl)
+    vocab, buckets, thr = 64, 64, 0.25
+    ids, wins = _fleet_windows(vocab=vocab)
+    scalar = {sid: DriftDetector(threshold=thr, buckets=buckets,
+                                 vocab=vocab) for sid in ids}
+    fleet = FleetDriftDetector(threshold=thr, buckets=buckets,
+                               vocab=vocab, impl=impl)
+    for sid, toks in zip(ids, wins[0]):
+        scalar[sid].set_reference(toks)
+    fleet.set_references(ids, wins[0])
+    for toks_all in wins:
+        want_trig = [sid for sid, toks in zip(ids, toks_all)
+                     if scalar[sid].observe(toks)]
+        got_trig = fleet.observe(ids, toks_all)
+        assert got_trig == want_trig
+        for sid, toks in zip(ids, toks_all):
+            # live signatures are always exact
+            assert (fleet.hist(sid) == scalar[sid].last_hist).all()
+            if impl == "exact":
+                assert fleet.score(sid) == scalar[sid].last_score
+            elif fleet.score(sid) > thr - fleet.band:
+                # near/above threshold: rescored in exact float64
+                assert fleet.score(sid) == scalar[sid].last_score
+            else:
+                assert fleet.score(sid) == pytest.approx(
+                    scalar[sid].last_score, abs=1e-5)
+
+
+@pytest.mark.parametrize("impl", ALL_IMPLS)
+def test_fleet_detector_vocab_boundary_and_zero_sum(impl):
+    """token == vocab clips into the top bucket (not bucket `buckets`)
+    and a zero-sum reference histogram scores finitely — identically to
+    the scalar detector."""
+    _skip_off_tpu(impl)
+    vocab, buckets, thr = 64, 64, 0.25
+    ids = ["boundary", "zeroref"]
+    scalar = {sid: DriftDetector(threshold=thr, buckets=buckets,
+                                 vocab=vocab) for sid in ids}
+    fleet = FleetDriftDetector(threshold=thr, buckets=buckets,
+                               vocab=vocab, impl=impl)
+    scalar["boundary"].set_reference(np.arange(vocab))
+    fleet.set_reference("boundary", np.arange(vocab))
+    scalar["zeroref"].set_reference([])          # zero-sum reference
+    fleet.set_reference("zeroref", [])
+    toks = np.stack([np.full((4, 8), vocab),     # all tokens == vocab
+                     np.arange(32).reshape(4, 8)])
+    want = [sid for sid, tk in zip(ids, toks) if scalar[sid].observe(tk)]
+    got = fleet.observe(ids, toks)
+    assert got == want
+    for sid in ids:
+        assert np.isfinite(fleet.score(sid))
+        if impl == "exact" or fleet.score(sid) > thr - fleet.band:
+            assert fleet.score(sid) == scalar[sid].last_score
+        else:
+            assert fleet.score(sid) == pytest.approx(
+                scalar[sid].last_score, abs=1e-5)
+        assert (fleet.hist(sid) == scalar[sid].last_hist).all()
+
+
+def test_fleet_detector_first_observation_sets_reference():
+    """Scalar semantics: without a reference, the first window becomes
+    the reference and never triggers."""
+    fleet = FleetDriftDetector(threshold=0.0, buckets=16, vocab=64)
+    scalar = DriftDetector(threshold=0.0, buckets=16, vocab=64)
+    toks = np.arange(64).reshape(2, 32)
+    assert fleet.observe(["s"], toks[None]) == []
+    assert not scalar.observe(toks)
+    assert (fleet.reference("s") == scalar.reference).all()
+    # second window with different data now triggers both
+    toks2 = np.zeros((2, 32), np.int64)
+    assert fleet.observe(["s"], toks2[None]) == ["s"]
+    assert scalar.observe(toks2)
+    assert fleet.score("s") == scalar.last_score
+
+
+def test_fleet_detector_churn_preserves_rows():
+    """Swap-with-last removal must not corrupt surviving streams'
+    references, scores, or live histograms."""
+    rng = np.random.default_rng(4)
+    fleet = FleetDriftDetector(threshold=0.25, buckets=32, vocab=64)
+    ids = [f"s{i}" for i in range(5)]
+    refs = rng.integers(0, 64, size=(5, 4, 16))
+    fleet.set_references(ids, refs)
+    live = rng.integers(0, 64, size=(5, 4, 16))
+    fleet.observe(ids, live)
+    before = {sid: (fleet.reference(sid), fleet.score(sid),
+                    fleet.hist(sid)) for sid in ids}
+    fleet.remove_stream("s1")                    # middle row: swaps s4 in
+    fleet.remove_stream("s1")                    # idempotent
+    assert len(fleet) == 4 and "s1" not in fleet
+    for sid in ("s0", "s2", "s3", "s4"):
+        r, sc, h = before[sid]
+        assert (fleet.reference(sid) == r).all()
+        assert fleet.score(sid) == sc
+        assert (fleet.hist(sid) == h).all()
+    # re-adding starts fresh (no stale reference)
+    fleet.add_stream("s1")
+    assert fleet.reference("s1") is None
+
+
+def test_controller_drift_impls_agree():
+    """ECCOController grouping decisions are independent of the drift
+    scoring backend: the kernel path's near-threshold float64 rescue
+    keeps window-loop behavior bit-identical to the exact path."""
+    import dataclasses
+    from repro.configs import smoke_config
+    from repro.core.controller import ControllerConfig, ECCOController
+    from repro.core.trainer import SharedEngine
+    from repro.data.streams import make_fleet
+
+    cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=64)
+    engine = SharedEngine(cfg)
+    histories = {}
+    for impl in ("exact", "xla"):
+        _, streams = make_fleet(vocab=64, regions=2, streams_per_region=2,
+                                dim=4, switch_times=(5.0,), seed=1)
+        cc = ControllerConfig(window_micro=4, micro_steps=2,
+                              train_batch=8, p_drop=0.5,
+                              shared_bandwidth=1e9, drift_impl=impl)
+        ctl = ECCOController(engine, streams, cc, seed=0)
+        ctl.warmup()
+        for _ in range(3):
+            ctl.run_window()
+        histories[impl] = ([w.groups for w in ctl.history],
+                           [e["kind"] + e["stream"]
+                            for e in ctl.grouper.events])
+    assert any(histories["exact"][0][-1].values())     # groups did form
+    assert [sorted(g.values()) for g in histories["exact"][0]] == \
+        [sorted(g.values()) for g in histories["xla"][0]]
+    assert histories["exact"][1] == histories["xla"][1]

@@ -1,0 +1,88 @@
+"""Golden-trace regression: one fixed-seed scenario run per framework,
+asserted equal to the checked-in traces under tests/golden/. Catches
+silent behavior drift in drift detection, grouping, allocation, and
+transmission control.
+
+After an INTENTIONAL behavior change, regenerate with
+
+    PYTHONPATH=src python -m repro.testing.trace --regen tests/golden
+
+and review the golden diff like code (see docs/scenarios.md).
+"""
+import copy
+import os
+
+import pytest
+
+from repro.testing import trace as T
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return T.make_engine_for(T.golden_scenario())
+
+
+@pytest.mark.parametrize("framework", T.GOLDEN_FRAMEWORKS)
+def test_trace_matches_golden(framework, engine):
+    got = T.golden_trace(framework, engine=engine)
+    want = T.load_trace(T.golden_path(GOLDEN_DIR, framework))
+    diffs = T.compare(got, want)
+    assert not diffs, "behavior drifted from golden trace " \
+        f"(regenerate only if intentional):\n" + "\n".join(diffs)
+
+
+# ---------------------------------------------------------------------------
+# the comparator itself must catch what it claims to catch
+# ---------------------------------------------------------------------------
+def _base():
+    return {
+        "meta": {"scenario": "s", "framework": "ecco", "seed": 0,
+                 "scenario_seed": 0, "windows": 1},
+        "windows": [{"t": 0.0,
+                     "drift": {"a": 0.1, "b": None},
+                     "groups": {"g0": ["a", "b"]},
+                     "shares": {"g0": 1.0},
+                     "bandwidth": {"a": 10.0, "b": 12.0},
+                     "acc": {"a": 0.5, "b": None},
+                     "events": [{"kind": "new", "stream": "a",
+                                 "job": "g0"}]}],
+    }
+
+
+def test_compare_clean_on_equal():
+    assert T.compare(_base(), _base()) == []
+
+
+def test_compare_flags_structural_drift():
+    for mutate in [
+        lambda tr: tr["windows"][0]["groups"]["g0"].pop(),
+        lambda tr: tr["windows"][0]["events"].clear(),
+        lambda tr: tr["windows"].clear(),
+        lambda tr: tr["meta"].update(seed=1),
+        lambda tr: tr["windows"][0]["drift"].update(a=0.4),
+        lambda tr: tr["windows"][0]["acc"].update(b=0.9),   # None -> float
+        lambda tr: tr["windows"][0]["bandwidth"].update(a=11.0),
+    ]:
+        bad = copy.deepcopy(_base())
+        mutate(bad)
+        assert T.compare(bad, _base()), mutate
+
+
+def test_compare_tolerates_float_wobble():
+    near = copy.deepcopy(_base())
+    near["windows"][0]["drift"]["a"] += 5e-5
+    near["windows"][0]["shares"]["g0"] -= 2e-3
+    near["windows"][0]["bandwidth"]["a"] *= 1.001
+    near["windows"][0]["acc"]["a"] += 0.03
+    assert T.compare(near, _base()) == []
+
+
+def test_goldens_checked_in():
+    for fw in T.GOLDEN_FRAMEWORKS:
+        path = T.golden_path(GOLDEN_DIR, fw)
+        assert os.path.exists(path), f"missing golden {path}"
+        tr = T.load_trace(path)
+        assert tr["meta"]["framework"] == fw
+        assert len(tr["windows"]) == tr["meta"]["windows"]

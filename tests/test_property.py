@@ -28,6 +28,70 @@ def test_gaimd_proportionality_property(shares):
 
 
 # ---------------------------------------------------------------------------
+# GAIMD: steady state tracks alpha/(1-beta); error metric well-behaved;
+# local caps are inviolable
+# ---------------------------------------------------------------------------
+@given(alphas=st.lists(st.floats(0.1, 1.0), min_size=2, max_size=6),
+       beta=st.floats(0.35, 0.65), seed=st.integers(0, 20))
+@settings(max_examples=15, deadline=None)
+def test_gaimd_steady_state_tracks_alpha_over_one_minus_beta(alphas, beta,
+                                                             seed):
+    """Yang & Lam: synchronized-loss GAIMD converges to rates
+    proportional to alpha_i / (1 - beta_i). Betas get a small
+    heterogeneous jitter; the sawtooth's (1+beta)/2 time-average factor
+    then bounds the residual, so the tolerance is loose but the
+    proportionality must hold."""
+    from repro.core import gaimd
+    rng = np.random.default_rng(seed)
+    a = np.asarray(alphas, np.float32)
+    b = np.clip(beta + rng.uniform(-0.05, 0.05, size=len(a)),
+                0.1, 0.9).astype(np.float32)
+    caps = np.full(len(a), np.inf, np.float32)       # absent local caps
+    r = gaimd.steady_state_rates(a, b, caps, shared_cap=200.0,
+                                 steps=8000, tail=3000)
+    target = a / (1.0 - b)
+    assert gaimd.proportionality_error(r, target) < 0.15, (a, b, r)
+
+
+@given(rates=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=8),
+       targets=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_gaimd_proportionality_error_bounds(rates, targets):
+    """proportionality_error is a normalized L1/2 distance between
+    distributions: always in [0, 1], and exactly 0 at the target."""
+    from repro.core.gaimd import proportionality_error
+    n = min(len(rates), len(targets))
+    r, t = np.asarray(rates[:n]), np.asarray(targets[:n])
+    err = proportionality_error(r, t)
+    assert 0.0 <= err <= 1.0
+    assert proportionality_error(t, t) == pytest.approx(0.0, abs=1e-12)
+    assert proportionality_error(3.0 * t + 0.0, t) == \
+        pytest.approx(0.0, abs=1e-9)                 # scale-invariant
+
+
+@given(n=st.integers(2, 8), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_gaimd_rates_never_exceed_local_caps(n, seed):
+    """Every simulated rate trajectory (not just the tail mean) respects
+    per-flow local uplink caps."""
+    from repro.core import gaimd
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(0.1, 1.5, n).astype(np.float32)
+    beta = rng.uniform(0.2, 0.8, n).astype(np.float32)
+    caps = rng.uniform(0.5, 20.0, n).astype(np.float32)
+    caps[rng.integers(0, n)] = np.inf                # mix in an uncapped flow
+    rates, final = gaimd.simulate(alpha, beta, caps,
+                                  shared_cap=float(rng.uniform(5, 50)),
+                                  steps=500)
+    rates = np.asarray(rates)
+    assert (rates <= caps[None, :] + 1e-5).all()
+    assert (np.asarray(final) <= caps + 1e-5).all()
+    tail = gaimd.steady_state_rates(alpha, beta, caps, 25.0, steps=2000,
+                                    tail=500)
+    assert (tail <= caps + 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
 # MoE dispatch: capacity and slot invariants
 # ---------------------------------------------------------------------------
 @given(t=st.integers(4, 64), E=st.integers(2, 16), k=st.integers(1, 4),

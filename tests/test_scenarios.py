@@ -1,0 +1,155 @@
+"""Scenario library: seeded determinism, churn plumbing end to end, and
+the vectorized DomainBank sampler's bit-equivalence with the original
+per-timestep searchsorted loop."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.data.scenarios import (SCENARIOS, ChurnEvent, build_scenario,
+                                  camera_churn)
+from repro.data.streams import DomainBank
+
+
+# ---------------------------------------------------------------------------
+# DomainBank.sample vectorization (fixed-seed equivalence)
+# ---------------------------------------------------------------------------
+def _sample_reference(bank, domain, rng, batch, seq_len, mix_with=None,
+                      mix_frac=0.0):
+    """The pre-vectorization sampler: per-timestep Python searchsorted."""
+    P = bank.P[domain]
+    if mix_with is not None and mix_frac > 0:
+        P = (1 - mix_frac) * P + mix_frac * bank.P[mix_with]
+    out = np.empty((batch, seq_len), np.int64)
+    tok = rng.integers(0, bank.vocab, size=batch)
+    cum = np.cumsum(P, axis=1)
+    for s in range(seq_len):
+        out[:, s] = tok
+        u = rng.random(batch)
+        tok = np.array([np.searchsorted(cum[t], x)
+                        for t, x in zip(tok, u)])
+        tok = np.minimum(tok, bank.vocab - 1)
+    return out
+
+
+@pytest.mark.parametrize("mix", [None, (2, 0.3)])
+def test_domain_bank_sample_matches_reference(mix):
+    bank = DomainBank(64, 4, dim=8, seed=0)
+    kw = {} if mix is None else {"mix_with": mix[0], "mix_frac": mix[1]}
+    got = bank.sample(1, np.random.default_rng(7), 32, 48, **kw)
+    want = _sample_reference(bank, 1, np.random.default_rng(7), 32, 48,
+                             **kw)
+    assert got.dtype == want.dtype
+    assert (got == want).all()
+
+
+# ---------------------------------------------------------------------------
+# scenario generators
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_deterministic_and_well_formed(name):
+    a = build_scenario(name, seed=3)
+    b = build_scenario(name, seed=3)
+    c = build_scenario(name, seed=4)
+    assert a.name == name and a.windows > 0
+    ids = [s.stream_id for s in a.streams]
+    assert len(ids) == len(set(ids))
+    # same seed -> identical fleet (ids, locations, lags, schedules, caps)
+    assert ids == [s.stream_id for s in b.streams]
+    for sa, sb in zip(a.streams, b.streams):
+        assert sa.loc == sb.loc and sa.lag == sb.lag
+        assert sa.region.schedule == sb.region.schedule
+    np.testing.assert_array_equal(a.bank.P, b.bank.P)
+    assert a.local_caps == b.local_caps
+    assert [dataclasses.astuple(e)[:3] for e in a.churn] == \
+        [dataclasses.astuple(e)[:3] for e in b.churn]
+    # a different seed perturbs the fleet
+    assert not np.array_equal(a.bank.P, c.bank.P)
+    # every stream samples deterministically
+    x = a.streams[0].sample(0.0, 2, 8)
+    y = b.streams[0].sample(0.0, 2, 8)
+    assert (x == y).all()
+
+
+def test_scenario_specs():
+    wave = build_scenario("drift_wave", seed=0)
+    switch = [s.region.schedule[1][0] for s in wave.streams]
+    assert sorted(switch) == switch and len(set(switch)) > 1   # staggered
+    di = build_scenario("diurnal", seed=0)
+    assert all(len(s.region.schedule) >= 4 for s in di.streams)  # recurs
+    fc = build_scenario("flash_crowd", seed=0)
+    post = {s.region.domain_at(1e9) for s in fc.streams}
+    assert len(post) == 1                   # everyone lands on one domain
+    pre = {s.region.domain_at(0.0) for s in fc.streams}
+    assert len(pre) > 1
+    bc = build_scenario("bandwidth_contention", seed=0)
+    assert bc.local_caps and set(bc.local_caps) == \
+        {s.stream_id for s in bc.streams}
+    assert bc.shared_bandwidth < 1e9
+    with pytest.raises(KeyError):
+        build_scenario("nope")
+
+
+def test_camera_churn_events():
+    sc = camera_churn(seed=0)
+    joins = [e for e in sc.churn if e.kind == "join"]
+    leaves = [e for e in sc.churn if e.kind == "leave"]
+    assert joins and leaves
+    initial = {s.stream_id for s in sc.streams}
+    for e in joins:
+        assert e.stream is not None
+        assert e.stream.stream_id == e.stream_id
+        assert e.stream_id not in initial       # genuinely new cameras
+    for e in leaves:
+        assert e.stream_id in initial
+    assert sc.events_at(joins[0].window) != []
+
+
+def test_run_scenario_does_not_consume_the_scenario():
+    """run_scenario deep-copies: running one scenario instance twice
+    yields identical traces (streams' rng state and churn Stream
+    objects must not be mutated by the first run)."""
+    from repro.testing import trace as T
+    sc = build_scenario("drift_wave", seed=0, regions=2,
+                        streams_per_region=2, windows=2)
+    engine = T.make_engine_for(sc)
+    traces = []
+    for _ in range(2):
+        tr = {}
+        T.run_scenario("ecco", sc, engine=engine, trace=tr,
+                       window_micro=2, micro_steps=1, train_batch=8)
+        traces.append(tr)
+    assert T.compare(traces[0], traces[1]) == []
+    assert traces[0] == traces[1]           # byte-identical, not just tol
+    # the scenario's own streams still hold their pristine rng state
+    fresh = build_scenario("drift_wave", seed=0, regions=2,
+                           streams_per_region=2, windows=2)
+    a = sc.streams[0].sample(0.0, 2, 8)
+    b = fresh.streams[0].sample(0.0, 2, 8)
+    assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# churn end to end through the controller
+# ---------------------------------------------------------------------------
+def test_controller_churn_end_to_end():
+    from repro.testing.trace import make_engine_for, run_scenario
+    sc = camera_churn(regions=1, streams_per_region=2, join_window=1,
+                      leave_window=2, windows=3, switch_time=5.0, seed=0)
+    engine = make_engine_for(sc)
+    ctl = run_scenario("ecco", sc, engine=engine, window_micro=2,
+                       micro_steps=1, train_batch=8)
+    live = {s.stream_id for s in ctl.streams}
+    joined = {e.stream_id for e in sc.churn if e.kind == "join"}
+    left = {e.stream_id for e in sc.churn if e.kind == "leave"}
+    assert joined <= live and not (left & live)
+    # detector rows track the fleet exactly
+    assert set(ctl.fleet.stream_ids) == live
+    # no job retains a departed member, and metrics cover the live fleet
+    members = {m.stream_id for j in ctl.jobs for m in j.members}
+    assert not (members & left)
+    assert set(ctl.history[-1].per_stream_acc) == live
+    # a departed camera's pooled training data is purged too: the group
+    # must not keep doing SGD on a distribution no live member has
+    for j in ctl.jobs:
+        assert not (set(j._pool_src) & left)

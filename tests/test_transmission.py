@@ -35,6 +35,24 @@ def test_profile_table_fallback_densest_fitting():
     assert t.best(7, token_budget=1000).tokens == 128
 
 
+def test_profile_table_empty_configs_no_crash():
+    """Regression: best() raised ValueError (max() of empty sequence)
+    when the table was built with no configs — both with and without
+    profiled accuracies pointing at the budget level."""
+    empty = tx.ProfileTable([])
+    assert empty.best(0) is None
+    assert empty.best(3, token_budget=16) is None
+    # decide() degrades to a zero-token transmission, not a crash
+    ctrl = tx.TransmissionController(empty)
+    d = ctrl.decide(gpu_budget_level=0, token_budget=64, p_share=0.5,
+                    n_members=2, achieved_bandwidth=8.0,
+                    window_seconds=1.0)
+    assert d.delivered_tokens == 0 and d.config.tokens == 0
+    # nonempty table where nothing fits still falls back (unchanged)
+    t = tx.ProfileTable([tx.SamplingConfig(4, 32)])
+    assert t.best(0, token_budget=1).tokens == 128
+
+
 def test_decision_scales_rate_by_members():
     t, _ = _table()
     ctrl = tx.TransmissionController(t, bytes_per_token=1.0)
