@@ -1,0 +1,184 @@
+"""Training-plane wall-clock sweeps: seed per-member/per-job loops vs
+the JobBank vmapped executables (batched_accuracy / train_micro_many).
+
+Two sweeps, both over fleet MEMBER counts (100 / 1k / 10k full, shrunk
+under --smoke):
+  * eval plane  — score every (member, job) pair of the fleet: the
+    seed's one `accuracy` device launch per member vs chunked
+    `batched_accuracy` fleet calls. This is the allocator measurement
+    pass + controller metrics hot path.
+  * train plane — one micro-window for every job: the seed's
+    per-job `train_micro` loop vs one vmapped `train_micro_many`
+    dispatch per shape group.
+
+Both paths are asserted bit-identical while being timed (the parity
+suite in tests/test_trainer_bank.py pins the semantics; here it guards
+the benchmark itself). Results go to stdout as CSV rows and to
+BENCH_trainer.json so the perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, make_engine
+from repro.configs import smoke_config
+from repro.core.grouping import Request
+from repro.core.trainer import RetrainJob, SharedEngine
+
+VOCAB = 64
+SEQ = 32
+EVAL_BATCH = 4          # subsample sequences per member
+POOL_ROWS = 64
+TRAIN_BATCH = 8
+MICRO_STEPS = 4
+MEMBERS_PER_JOB = 16
+MAX_JOBS = 100          # caps bank memory at the 10k-member point
+
+OUT_JSON = "BENCH_trainer.json"
+
+
+def _scalar_engine() -> SharedEngine:
+    cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=VOCAB)
+    return SharedEngine(cfg, batched=False)
+
+
+def _fleet(engine, members: int, *, seed0: int = 0):
+    """`members` streams spread over min(MAX_JOBS, members//10) jobs,
+    identically seeded so the batched/scalar fleets are twins."""
+    n_jobs = max(1, min(MAX_JOBS, members // MEMBERS_PER_JOB))
+    rng = np.random.default_rng(1234)
+    jobs, pairs = [], []
+    for j in range(n_jobs):
+        lo = j * members // n_jobs
+        hi = (j + 1) * members // n_jobs
+        first = Request(stream_id=f"s{lo}", t=0.0, loc=(0.0, 0.0),
+                        subsamples=rng.integers(
+                            0, VOCAB, size=(EVAL_BATCH, SEQ)),
+                        acc=0.0,
+                        train_data=rng.integers(
+                            0, VOCAB, size=(POOL_ROWS, SEQ)))
+        job = RetrainJob(engine, first, micro_steps=MICRO_STEPS,
+                         batch=TRAIN_BATCH, seed=seed0 + j,
+                         pool_rows=POOL_ROWS)
+        for m in range(lo + 1, hi):
+            job.add_member(Request(
+                stream_id=f"s{m}", t=0.0, loc=(0.0, 0.0),
+                subsamples=rng.integers(0, VOCAB, size=(EVAL_BATCH, SEQ)),
+                acc=0.0))
+        jobs.append(job)
+        pairs.extend((job, mem.subsamples) for mem in job.members)
+    return jobs, pairs
+
+
+def _eval_plane(rows: Rows, engine, sizes, results):
+    """Fleet eval pass: per-member loop vs batched fleet calls."""
+    for members in sizes:
+        jobs, pairs = _fleet(engine, members)
+        # seed loop kept params per job on device (no bank read per
+        # member): prefetch once, then one `accuracy` launch per member
+        params_by_job = {id(j): jax.tree.map(jnp.asarray,
+                                             j.state["params"])
+                         for j in jobs}
+        # warm both executables on the real shapes (chunk sizes pad to
+        # powers of two, so a 1-pair warm call would leave the big
+        # chunk shapes compiling inside the timed region)
+        engine.accuracy(params_by_job[id(jobs[0])], pairs[0][1])
+        engine.eval_pairs(pairs)
+        t0 = time.perf_counter()
+        scalar = [engine.accuracy(params_by_job[id(j)], s)
+                  for j, s in pairs]
+        t_scalar = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        batched = engine.eval_pairs(pairs)
+        t_batched = time.perf_counter() - t0
+
+        assert batched == scalar, "eval plane drifted from scalar loop"
+        sp = t_scalar / max(t_batched, 1e-9)
+        rows.add(f"eval_n{members}_scalar_s", t_scalar)
+        rows.add(f"eval_n{members}_batched_s", t_batched)
+        rows.add(f"eval_n{members}_speedup", sp)
+        results["eval_plane"].append(dict(
+            members=members, jobs=len(jobs), pairs=len(pairs),
+            scalar_s=round(t_scalar, 4), batched_s=round(t_batched, 4),
+            speedup=round(sp, 2)))
+        for j in jobs:
+            j.release()
+
+
+def _train_plane(rows: Rows, engine, scalar_engine, sizes, results,
+                 micro_windows: int = 2):
+    """One micro-window for every job of the fleet, `micro_windows`
+    times: sequential train_micro on the scalar twin vs
+    train_micro_many on the batched engine (identical seeds, identical
+    trajectories)."""
+    for members in sizes:
+        fast, _ = _fleet(engine, members, seed0=members)
+        slow, _ = _fleet(scalar_engine, members, seed0=members)
+
+        # warm the compile caches with window 0 on BOTH fleets
+        # (untimed) so the timed windows compare identical work and the
+        # twin trajectories stay in lock-step
+        engine.train_micro_many(fast)
+        for j in slow:
+            j.train_micro()
+
+        t0 = time.perf_counter()
+        for _ in range(micro_windows):
+            engine.train_micro_many(fast)
+        t_batched = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for _ in range(micro_windows):
+            for j in slow:
+                j.train_micro()
+        t_scalar = time.perf_counter() - t0
+
+        for f, s in zip(fast, slow):
+            af = engine.eval_pairs([(f, m.subsamples)
+                                    for m in f.members[:1]])
+            as_ = [s.eval_on(m.subsamples) for m in s.members[:1]]
+            assert af == as_, "train plane drifted from scalar loop"
+        sp = t_scalar / max(t_batched, 1e-9)
+        rows.add(f"train_n{members}_scalar_s", t_scalar)
+        rows.add(f"train_n{members}_batched_s", t_batched)
+        rows.add(f"train_n{members}_speedup", sp)
+        results["train_plane"].append(dict(
+            members=members, jobs=len(fast),
+            micro_windows=micro_windows,
+            scalar_s=round(t_scalar, 4), batched_s=round(t_batched, 4),
+            speedup=round(sp, 2)))
+        for j in fast + slow:
+            j.release()
+
+
+def run(smoke: bool = False):
+    rows = Rows("trainer")
+    engine = make_engine()
+    scalar_engine = _scalar_engine()
+    results = {"smoke": smoke, "eval_plane": [], "train_plane": []}
+    if smoke:
+        _eval_plane(rows, engine, (40, 120), results)
+        _train_plane(rows, engine, scalar_engine, (40,), results,
+                     micro_windows=1)
+    else:
+        _eval_plane(rows, engine, (100, 1000, 10000), results)
+        _train_plane(rows, engine, scalar_engine, (100, 1000, 10000),
+                     results)
+    with open(OUT_JSON, "w") as f:
+        json.dump(results, f, indent=1)
+        f.write("\n")
+    rows.add("json_out", OUT_JSON)
+    return rows.emit()
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv[1:] or bool(os.environ.get("SMOKE")))

@@ -4,6 +4,8 @@
 
 Prints ``benchmark,metric,value`` CSV rows. Mapping to the paper:
     similarity      — Fig. 2c / Fig. 8 (group vs independent, similarity)
+    trainer         — training-plane batching (JobBank vmapped
+                      executables vs per-member/per-job loops)
     end_to_end      — Fig. 6 (accuracy vs GPU / bandwidth budgets)
     scalability     — Fig. 7 (accuracy + response time vs #streams)
     grouping        — Fig. 9 (dynamic regrouping trace)
@@ -27,6 +29,7 @@ BENCHES = [
     "roofline",
     "faults",
     "similarity",
+    "trainer",
     "allocator",
     "grouping",
     "transmission",

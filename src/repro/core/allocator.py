@@ -23,6 +23,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+from repro.core.batching import shared_engine
+
 
 @dataclasses.dataclass
 class AllocationTrace:
@@ -74,11 +76,11 @@ class ECCOAllocator:
         traj: Dict[str, List[float]] = {j.job_id: [] for j in jobs}
         used: Dict[str, int] = {j.job_id: 0 for j in jobs}
 
-        def micro_retraining(j):
+        def record(j, a_i, a_f):
+            # the ONE bookkeeping path for a measured micro-window —
+            # batched and scalar passes must stay field-for-field
+            # identical (bit-identity contract, golden-trace pinned)
             nonlocal budget
-            a_i = j.eval()
-            j.train_micro()
-            a_f = j.eval()
             budget -= 1
             acc[j.job_id] = a_f
             acc_gain[j.job_id] = a_f - a_i
@@ -86,11 +88,28 @@ class ECCOAllocator:
             traj[j.job_id].append(a_f)
             used[j.job_id] += 1
 
-        # initial training pass
-        for j in jobs:
-            if budget <= 0:
-                break
-            micro_retraining(j)
+        def micro_retraining(j):
+            a_i = j.eval()
+            j.train_micro()
+            record(j, a_i, j.eval())
+
+        # initial training pass — with a batch-capable engine the whole
+        # fleet's measurement collapses to three fleet calls (eval all,
+        # one micro-window for all, eval all) instead of 4|J| member
+        # launches. Bit-identical to the per-job micro_retraining loop:
+        # jobs are independent (own state, own rng, own pool), so
+        # reordering eval/train across jobs changes nothing per job.
+        head = jobs[:min(budget, len(jobs))]
+        eng = shared_engine(head) if head else None
+        if eng is not None:
+            a_i = eng.eval_jobs(head)
+            eng.train_micro_many(head)
+            a_f = eng.eval_jobs(head)
+            for j, ai, af in zip(head, a_i, a_f):
+                record(j, ai, af)
+        else:
+            for j in head:
+                micro_retraining(j)
         gains = self._objective_gains(jobs, acc, acc_gain)
 
         by_id = {j.job_id: j for j in jobs}
@@ -152,14 +171,28 @@ class UniformAllocator(ECCOAllocator):
         order, traj, used = [], {j.job_id: [] for j in jobs}, \
             {j.job_id: 0 for j in jobs}
         acc = {}
-        for i in range(window_micro):
-            j = jobs[i % len(jobs)]
-            j.train_micro()
-            a = j.eval()
-            acc[j.job_id] = a
-            order.append(j.job_id)
-            traj[j.job_id].append(a)
-            used[j.job_id] += 1
+        # round-robin, one full round per batched (train all, eval all)
+        # pair of fleet calls; per-job numbers are identical to the
+        # seed's interleaved train/eval loop because jobs are
+        # independent
+        eng = shared_engine(jobs)
+        done = 0
+        while done < window_micro:
+            rnd = jobs[:min(len(jobs), window_micro - done)]
+            if eng is not None:
+                eng.train_micro_many(rnd)
+                accs = eng.eval_jobs(rnd)
+            else:
+                accs = []
+                for j in rnd:
+                    j.train_micro()
+                    accs.append(j.eval())
+            for j, a in zip(rnd, accs):
+                acc[j.job_id] = a
+                order.append(j.job_id)
+                traj[j.job_id].append(a)
+                used[j.job_id] += 1
+            done += len(rnd)
         shares = {j.job_id: 1.0 / len(jobs) for j in jobs}
         return AllocationTrace(order=order, acc=traj, shares=shares,
                                gpu_time=used)

@@ -1,0 +1,39 @@
+"""Duck-typed probe wiring the batched training plane (JobBank +
+vmapped SharedEngine executables) into the allocator/grouper/controller
+loops.
+
+Those loops operate on duck-typed jobs (their tests drive them with
+scripted fakes), so the batched fast paths must not assume RetrainJob.
+`shared_engine(jobs)` answers "can this set of jobs be measured and
+trained in batched fleet calls?": every job must be a live handle in
+the SAME SharedEngine's JobBank and the engine must have batching
+enabled. Callers fall back to the seed per-job loop on None. The
+batched and scalar paths are bit-identical
+(tests/test_trainer_bank.py), so the probe only decides dispatch
+cost, never decisions.
+"""
+from __future__ import annotations
+
+
+def shared_engine(jobs):
+    """The batch-capable SharedEngine shared by every job in `jobs`,
+    or None (empty set, fake test jobs, mixed engines, freed slots, or
+    engine.batched=False)."""
+    eng = None
+    for j in jobs:
+        e = getattr(j, "engine", None)
+        slot = getattr(j, "_slot", None)
+        if (e is None or slot is None
+                or getattr(slot, "idx", None) is None
+                or getattr(slot, "dead", False)):
+            return None
+        if eng is None:
+            eng = e
+        elif e is not eng:
+            return None
+    if eng is None or not getattr(eng, "batched", False):
+        return None
+    for attr in ("eval_jobs", "eval_pairs", "train_micro_many"):
+        if not callable(getattr(eng, attr, None)):
+            return None
+    return eng

@@ -10,6 +10,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.allocator import ECCOAllocator, AllocationTrace
+from repro.core.batching import shared_engine
 from repro.core.drift import FleetDriftDetector, batch_token_histogram
 from repro.core.gaimd import ecco_params, steady_state_rates
 from repro.core.grouping import Grouper, Request
@@ -107,7 +108,9 @@ class ECCOController:
 
     def remove_stream(self, stream_id: str):
         """A camera leaves the fleet: drop its detector row, its job
-        membership (empty jobs die), and its grouping-index row."""
+        membership (empty jobs die), its grouping-index row, and its
+        pending-request clock (response_times must not report latencies
+        for cameras no longer in the fleet)."""
         self.streams = [s for s in self.streams
                         if s.stream_id != stream_id]
         self.fleet.remove_stream(stream_id)
@@ -117,6 +120,7 @@ class ECCOController:
             job.purge_stream_data(stream_id)
         self.jobs[:] = [j for j in self.jobs if j.members]
         self.sig_index.remove(stream_id)
+        self.request_time.pop(stream_id, None)
 
     # ------------------------------------------------------------------
     def run_window(self) -> WindowMetrics:
@@ -203,16 +207,27 @@ class ECCOController:
                     self.sig_index.refresh_sig(m.stream_id, m.sig)
             self.grouper.update_grouping(self.jobs, t)
 
-        # metrics
+        # metrics: eval samples stay per-stream draws (each stream owns
+        # its rng, drawn in fleet order), scoring is ONE batched fleet
+        # call instead of a device launch per stream
         acc = {}
         by_stream = self._jobs_by_stream()
+        evs = {}
         for s in self.streams:
-            j = by_stream.get(s.stream_id)
-            ev = s.sample(t + 0.5, cc.eval_batch, cc.seq_len)
-            if j is not None:
-                acc[s.stream_id] = self.engine.accuracy(j.state["params"], ev)
-            else:
-                acc[s.stream_id] = float("nan")
+            evs[s.stream_id] = s.sample(t + 0.5, cc.eval_batch, cc.seq_len)
+        grouped = [s.stream_id for s in self.streams
+                   if by_stream.get(s.stream_id) is not None]
+        gjobs = [by_stream[sid] for sid in grouped]
+        eng = shared_engine(gjobs) if gjobs else None
+        if eng is not None:
+            vals = eng.eval_pairs([(j, evs[sid])
+                                   for sid, j in zip(grouped, gjobs)])
+        else:
+            vals = [j.eval_on(evs[sid])
+                    for sid, j in zip(grouped, gjobs)]
+        got = dict(zip(grouped, vals))
+        for s in self.streams:
+            acc[s.stream_id] = got.get(s.stream_id, float("nan"))
         groups = {j.job_id: [m.stream_id for m in j.members]
                   for j in self.jobs}
         wm = WindowMetrics(t=t, per_stream_acc=acc, groups=groups,

@@ -28,6 +28,7 @@ import dataclasses
 import math
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.core.batching import shared_engine
 from repro.core.signature_index import SignatureIndex
 
 
@@ -103,10 +104,17 @@ class Grouper:
         else:
             cand_idx = self._python_candidates(jobs, req)
         candidates: Dict[int, float] = {}
-        for idx in cand_idx:                     # ascending: ties resolve
-            acc_j = jobs[idx].eval_on(req.subsamples)   # to the oldest job
-            if acc_j >= req.acc:                 # performance check
-                candidates[idx] = acc_j
+        if cand_idx:
+            cjobs = [jobs[i] for i in cand_idx]
+            eng = shared_engine(cjobs)
+            if eng is not None:     # all candidates scored in one call
+                accs = eng.eval_pairs([(cj, req.subsamples)
+                                       for cj in cjobs])
+            else:
+                accs = [cj.eval_on(req.subsamples) for cj in cjobs]
+            for idx, acc_j in zip(cand_idx, accs):   # ascending: ties
+                if acc_j >= req.acc:   # resolve to the oldest passing job
+                    candidates[idx] = acc_j
         if candidates:
             best = max(candidates, key=candidates.get)
             jobs[best].add_member(req)
@@ -134,9 +142,22 @@ class Grouper:
         drift collapses accuracy far below any smoothed reference.
         """
         requeued: List[Request] = []
+        # window-end member evals: ONE batched fleet call. Eval mutates
+        # nothing, membership only shrinks during the loop, and a
+        # member belongs to exactly one job — so a snapshot taken here
+        # covers every (job, member) eval the loop performs.
+        cached: Dict[tuple, float] = {}
+        eng = shared_engine(jobs) if jobs else None
+        if eng is not None:
+            snap = [(job, r) for job in jobs for r in job.members]
+            accs = eng.eval_pairs([(job, r.subsamples) for job, r in snap])
+            cached = {(id(job), id(r)): a
+                      for (job, r), a in zip(snap, accs)}
         for job in list(jobs):
             for r in list(job.members):
-                acc_n = job.eval_on(r.subsamples)
+                key = (id(job), id(r))
+                acc_n = (cached[key] if key in cached
+                         else job.eval_on(r.subsamples))
                 if r.acc_prev is not None and r.acc_prev > 0:
                     rel = (acc_n - r.acc_prev) / r.acc_prev
                     if rel < -self.p_drop:       # second drift detected

@@ -5,12 +5,25 @@ the teacher's soft labels).
 All jobs of a fleet share ONE compiled train/eval executable (same model
 config), so micro-window context switches are cheap — the TPU analogue of
 ECCO's job switching on a time-shared GPU.
+
+Training-plane layout (docs/training_plane.md): every job's train-state
+lives in ONE stacked pytree (`JobBank`, amortized-doubling capacity,
+swap-compaction on job death — same row discipline as
+FleetDriftDetector), every job's data pool is a fixed-capacity dense
+ring buffer of (seq,) token rows with per-row stream tags
+(`TokenRingPool`), and `SharedEngine` exposes vmapped executables —
+`batched_accuracy` scores every (member, job) pair of the fleet in one
+call per chunk, `train_micro_many` runs one micro-window for a SET of
+jobs via vmap over the stacked states. `RetrainJob` stays the thin
+duck-typed handle the allocator/grouper drive; the batched paths are
+bit-identical to its scalar loop (tests/test_trainer_bank.py), so they
+change dispatch cost, never decisions.
 """
 from __future__ import annotations
 
-import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional
+import weakref
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,16 +32,285 @@ import numpy as np
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.grouping import Request
 from repro.models.model import Model, build_model
-from repro.train.train_step import init_state, make_train_step
+from repro.train.train_step import (init_state, make_train_step,
+                                    make_train_step_many)
 
 _job_counter = itertools.count()
 
 
+def _pad_size(n: int, floor: int = 4) -> int:
+    """Smallest size >= n from the {2^k, 3*2^(k-2)} grid (>= floor):
+    the jitted vmapped executables compile for ~2 shapes per octave
+    instead of one per fleet size, while padding waste stays <= 1/3
+    (pure powers of two waste up to 2x — measurable wall-clock on the
+    compute-bound CPU path)."""
+    if n <= floor:
+        return floor
+    k = (n - 1).bit_length()            # 2^k is the next power of two
+    half = 3 << (k - 2) if k >= 2 else 1 << k   # 3/4 of it
+    return half if half >= n else 1 << k
+
+
+class TokenRingPool:
+    """Fixed-capacity dense ring buffer of (seq,) token rows, each row
+    tagged with the stream that contributed it.
+
+    Replaces the seed's Python list of (B, S) arrays: `rows()` is the
+    oldest->newest dense array `train_micro` samples batches from
+    (bit-identical to the seed's per-micro-window np.concatenate
+    order, without re-concatenating), eviction is by total pooled ROWS
+    — a real token budget; the seed's 64-ENTRY sliding window was an
+    unbounded memory window for variably-sized entries — and the
+    per-row stream tag lets camera churn purge a departed stream's
+    rows (`purge`).
+    """
+
+    def __init__(self, capacity_rows: int = 512):
+        if capacity_rows <= 0:
+            raise ValueError("capacity_rows must be positive")
+        self.capacity = int(capacity_rows)
+        self._rows: Optional[np.ndarray] = None    # (capacity, seq)
+        self._src = np.empty(self.capacity, object)  # stream tag per row
+        self._start = 0                            # oldest row position
+        self._count = 0
+
+    def __len__(self) -> int:
+        return self._count
+
+    @property
+    def seq(self) -> Optional[int]:
+        return None if self._rows is None else self._rows.shape[1]
+
+    def _order(self) -> np.ndarray:
+        """Physical indices of the live rows, oldest -> newest."""
+        return (self._start + np.arange(self._count)) % self.capacity
+
+    def add(self, tokens, stream_id: Optional[str] = None):
+        arr = np.asarray(tokens)
+        rows = arr.reshape(-1, arr.shape[-1])
+        if self._rows is None:
+            self._rows = np.zeros((self.capacity, rows.shape[1]), arr.dtype)
+        if rows.shape[1] != self._rows.shape[1]:
+            raise ValueError(
+                f"pool rows are (seq={self._rows.shape[1]},); got "
+                f"seq={rows.shape[1]}")
+        n = rows.shape[0]
+        if n >= self.capacity:
+            # a single oversized entry: only its newest `capacity` rows
+            # fit the budget
+            self._rows[:] = rows[-self.capacity:]
+            self._src[:] = stream_id
+            self._start, self._count = 0, self.capacity
+            return
+        end = (self._start + self._count) % self.capacity
+        idx = (end + np.arange(n)) % self.capacity
+        self._rows[idx] = rows
+        self._src[idx] = stream_id
+        over = self._count + n - self.capacity
+        if over > 0:                  # evict the oldest rows
+            self._start = (self._start + over) % self.capacity
+            self._count = self.capacity
+        else:
+            self._count += n
+
+    def rows(self) -> np.ndarray:
+        """All pooled rows as one dense (count, seq) array, oldest ->
+        newest — what train batches are sampled from."""
+        if self._rows is None or self._count == 0:
+            return np.zeros((0, self.seq or 0), np.int64)
+        return self._rows[self._order()]
+
+    def sources(self) -> List[Optional[str]]:
+        """Per-row stream tags, oldest -> newest (parallel to rows())."""
+        if self._count == 0:
+            return []
+        return list(self._src[self._order()])
+
+    def purge(self, stream_id: str):
+        """Drop every row contributed by `stream_id`, preserving the
+        relative order of the survivors."""
+        if self._count == 0:
+            return
+        order = self._order()
+        keep_mask = np.array([self._src[i] != stream_id for i in order])
+        keep = order[keep_mask]
+        kept_rows = self._rows[keep]           # fancy index: copies
+        kept_src = self._src[keep]
+        self._start = 0
+        self._count = kept_rows.shape[0]
+        self._rows[:self._count] = kept_rows
+        self._src[:self._count] = kept_src
+
+
+class _Slot:
+    """Mutable bank position for one job. Swap-compaction retargets the
+    moved survivor by rewriting `idx` in place; a freed-and-compacted
+    slot has idx=None. `dead` marks slots queued for compaction."""
+    __slots__ = ("idx", "dead")
+
+    def __init__(self, idx: int):
+        self.idx: Optional[int] = idx
+        self.dead = False
+
+
+class JobBank:
+    """All job train-states in ONE stacked pytree.
+
+    Leaves are host arrays of shape (capacity, ...): capacity grows by
+    amortized doubling, job death swap-compacts the dead row with the
+    last live one (same discipline as FleetDriftDetector rows), and
+    the vmapped executables gather/scatter only the slots they touch.
+    Reads return independent copies — a bank row may be overwritten by
+    compaction after the caller lets go of its job handle.
+    """
+
+    def __init__(self, engine: "SharedEngine", capacity: int = 4):
+        self.engine = engine
+        self._cap = int(capacity)
+        self._stack = None           # state pytree, leaves (cap, ...)
+        self._treedef = None
+        self._slots: List[_Slot] = []
+        self._dead: List[_Slot] = []
+
+    def __len__(self) -> int:
+        """Live slots, including dead-but-not-yet-compacted ones."""
+        return len(self._slots)
+
+    @property
+    def capacity(self) -> int:
+        return self._cap
+
+    def _init_stack(self, template):
+        leaves, self._treedef = jax.tree.flatten(template)
+        self._stack = jax.tree.unflatten(self._treedef, [
+            np.zeros((self._cap,) + np.shape(x), np.asarray(x).dtype)
+            for x in leaves])
+
+    def _grow_to(self, need: int):
+        """Amortized doubling: allocating the Nth job is O(state), not
+        O(N * state)."""
+        if need <= self._cap:
+            return
+        new_cap = max(need, 2 * self._cap)
+        pad = new_cap - self._cap
+        if self._stack is not None:
+            self._stack = jax.tree.map(
+                lambda x: np.concatenate(
+                    [x, np.zeros((pad,) + x.shape[1:], x.dtype)]),
+                self._stack)
+        self._cap = new_cap
+
+    def _state_leaves(self, state) -> List:
+        leaves, treedef = jax.tree.flatten(state)
+        if treedef != self._treedef:
+            raise ValueError(
+                f"state tree mismatch: bank holds {self._treedef}, "
+                f"got {treedef}")
+        return leaves
+
+    def alloc(self, state) -> _Slot:
+        self.compact()
+        if self._stack is None:
+            self._init_stack(state)
+        self._grow_to(len(self._slots) + 1)
+        slot = _Slot(len(self._slots))
+        self._slots.append(slot)
+        self.write(slot.idx, state)
+        return slot
+
+    def free(self, slot: _Slot):
+        """QUEUE the slot for reclamation; rows do not move here.
+
+        free() runs from GC finalizers, i.e. at arbitrary allocation
+        points — job handles can sit in cyclic garbage (controllers
+        hold reference cycles) and die mid-operation in a LATER run on
+        the same engine. Batched callers capture slot indices right
+        before a fleet call, so moving rows here would silently
+        evaluate/train the wrong job. Actual swap-compaction happens in
+        compact(), which every allocating or batched entry point runs
+        FIRST — before any index is captured. Idempotent."""
+        if slot.idx is None or slot.dead:
+            return
+        slot.dead = True
+        self._dead.append(slot)
+
+    def compact(self):
+        """Swap-with-last removal of every queued-dead slot, keeping
+        live rows dense (capacity is retained; rows beyond len(self)
+        are garbage). Only called at deterministic safe points."""
+        while self._dead:
+            slot = self._dead.pop()
+            idx = slot.idx
+            last = len(self._slots) - 1
+            if idx != last:
+                moved = self._slots[last]
+                for x in jax.tree.leaves(self._stack):
+                    x[idx] = x[last]
+                moved.idx = idx
+                self._slots[idx] = moved
+            self._slots.pop()
+            slot.idx = None
+
+    @staticmethod
+    def _check_idx(idx):
+        """A freed-and-compacted slot has idx=None; numpy would treat
+        None as np.newaxis and broadcast a write across the WHOLE bank
+        (silent fleet-wide corruption) — fail loudly instead."""
+        if idx is None:
+            raise ValueError("use-after-release: job's bank slot was freed")
+        return idx
+
+    def read(self, idx: int):
+        """Slot `idx`'s state as an independent pytree copy."""
+        self._check_idx(idx)
+        return jax.tree.map(lambda x: np.array(x[idx]), self._stack)
+
+    def read_params(self, idx: int):
+        """Params-only copy of slot `idx` — the eval hot path doesn't
+        pay for copying the Adam moments (~2x params)."""
+        self._check_idx(idx)
+        return jax.tree.map(lambda x: np.array(x[idx]),
+                            self._stack["params"])
+
+    def write(self, idx: int, state):
+        self._check_idx(idx)
+        for dst, src in zip(jax.tree.leaves(self._stack),
+                            self._state_leaves(state)):
+            dst[idx] = np.asarray(src)
+
+    def gather(self, idxs: Sequence[int]):
+        """Stacked device states for the selected slots (leaves
+        (k, ...)) — the input of the vmapped executables."""
+        sel = np.asarray(idxs, np.int64)
+        return jax.tree.map(lambda x: jnp.asarray(x[sel]), self._stack)
+
+    def scatter(self, idxs: Sequence[int], states):
+        sel = np.asarray(idxs, np.int64)
+        for dst, src in zip(jax.tree.leaves(self._stack),
+                            self._state_leaves(states)):
+            dst[sel] = np.asarray(src)
+
+    def params_stack(self):
+        """The stacked params subtree (leaves (capacity, ...)) —
+        `batched_accuracy`'s params_stack argument."""
+        return None if self._stack is None else self._stack["params"]
+
+
 class SharedEngine:
-    """Compiled train/eval executables shared by every job of a fleet."""
+    """Compiled train/eval executables shared by every job of a fleet.
+
+    Scalar executables (`accuracy`, `train_steps`) serve single jobs;
+    the vmapped ones (`batched_accuracy`, `eval_pairs`, `eval_jobs`,
+    `train_micro_many`) serve the whole fleet per device call and are
+    bit-identical to looping the scalar path. `batched=False` disables
+    the vmapped dispatch everywhere (the duck-typed probe in
+    repro.core.batching reports the engine as not batch-capable), which
+    the parity tests and benchmarks use as the reference scalar twin.
+    """
 
     def __init__(self, cfg: ModelConfig, tcfg: Optional[TrainConfig] = None,
-                 *, distill_weight: float = 1.0):
+                 *, distill_weight: float = 1.0, batched: bool = True,
+                 eval_chunk: int = 128, batch_min_jobs: int = 4):
         self.cfg = cfg
         self.model = build_model(cfg)
         # b2=0.999 + no decay: the small-batch streaming regime needs the
@@ -37,6 +319,7 @@ class SharedEngine:
         self.tcfg = tcfg or TrainConfig(learning_rate=1e-3, b2=0.999,
                                         weight_decay=0.0, warmup_steps=5,
                                         total_steps=100000, remat="none")
+        self._distill_weight = distill_weight
         self._train = jax.jit(make_train_step(
             self.model, self.tcfg, distill_weight=distill_weight))
 
@@ -46,6 +329,21 @@ class SharedEngine:
             pred = jnp.argmax(logits[:, :-1].astype(jnp.float32), axis=-1)
             return jnp.mean((pred == toks[:, 1:]).astype(jnp.float32))
         self._acc = jax.jit(_acc)
+
+        self.batched = bool(batched)
+        self.eval_chunk = int(eval_chunk)
+        # vmapped train only pays off once lane padding + state
+        # gather/scatter amortize over enough jobs; smaller groups take
+        # the scalar step (identical numbers, and small fleets skip the
+        # vmapped-executable compile entirely)
+        self.batch_min_jobs = int(batch_min_jobs)
+        self.bank = JobBank(self)
+
+        # flattened fleet eval: a job's members ride the EXAMPLE axis of
+        # one forward (params read once per job, GEMMs see M*B rows);
+        # one jitted executable per member-batch size B
+        self._acc_flat: Dict[int, Callable] = {}
+        self._train_many: Dict[int, Callable] = {}
 
     def fresh_state(self, seed: int = 0):
         return init_state(self.model, jax.random.PRNGKey(seed), self.tcfg)
@@ -60,38 +358,238 @@ class SharedEngine:
         """Top-1 next-token accuracy — the mAP analogue."""
         return float(self._acc(params, jnp.asarray(tokens)))
 
+    # -- batched eval plane -------------------------------------------------
+    def _acc_flat_fn(self, b: int) -> Callable:
+        """Jitted flat eval for member-batch size `b`: takes (M*b, S)
+        token rows + one job's params, returns (M,) per-member
+        accuracies — each member's logits/argmax/mean identical to its
+        own scalar `_acc` call (rows of a batch are independent)."""
+        fn = self._acc_flat.get(b)
+        if fn is None:
+            def flat(params, toks):
+                logits, _ = self.model.apply(params, toks,
+                                             compute_dtype=jnp.float32)
+                pred = jnp.argmax(logits[:, :-1].astype(jnp.float32),
+                                  axis=-1)
+                ok = (pred == toks[:, 1:]).astype(jnp.float32)
+                return jnp.mean(ok.reshape(toks.shape[0] // b, b, -1),
+                                axis=(1, 2))
+            fn = jax.jit(flat)
+            self._acc_flat[b] = fn
+        return fn
+
+    def batched_accuracy(self, params_stack, tokens, job_ids) -> np.ndarray:
+        """Score every (tokens[i], params_stack[job_ids[i]]) pair of the
+        fleet, bit-identical to calling `accuracy` per pair.
+
+        tokens is (P, B, S) — pair i's eval batch; job_ids (P,) indexes
+        the stacked params (JobBank slots). Pairs are grouped by job and
+        each job's member batches are FLATTENED into the example axis of
+        one forward per chunk of ~eval_chunk rows: the job's params are
+        read once per chunk instead of once per member, the GEMMs see
+        M*B rows instead of B (the measured win on CPU — per-pair eval
+        is compute/memory-bound, not launch-bound), and device launches
+        drop from one per member to one per (job, chunk). Member counts
+        pad to a multiple of 8 so the executable compiles for a handful
+        of shapes; padded lanes are discarded.
+        """
+        toks = np.asarray(tokens)
+        ids = np.asarray(job_ids, np.int64)
+        out = np.empty(ids.shape[0], np.float32)
+        if ids.shape[0] == 0:
+            return out
+        if toks.ndim != 3:
+            raise ValueError(f"tokens must be (P, B, S); got {toks.shape}")
+        b = toks.shape[1]
+        groups: Dict[int, List[int]] = {}
+        for i, j in enumerate(ids):
+            groups.setdefault(int(j), []).append(i)
+        m_chunk = max(1, self.eval_chunk // b)     # members per flat call
+        fn = self._acc_flat_fn(b)
+        for jid, members in groups.items():
+            params = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[jid]),
+                                  params_stack)
+            for lo in range(0, len(members), m_chunk):
+                sel = members[lo:lo + m_chunk]
+                m = len(sel)
+                m_pad = min(m_chunk, -(-m // 8) * 8)
+                tk = np.zeros((m_pad * b,) + toks.shape[2:], toks.dtype)
+                tk[:m * b] = toks[sel].reshape(m * b, -1)
+                res = fn(params, jnp.asarray(tk))
+                out[sel] = np.asarray(res)[:m]
+        return out
+
+    def _bank_backed(self, jobs) -> bool:
+        def live(j):
+            slot = getattr(j, "_slot", None)
+            return (slot is not None and slot.idx is not None
+                    and not slot.dead)
+        return (self.batched and self.bank.params_stack() is not None
+                and all(getattr(j, "engine", None) is self and live(j)
+                        for j in jobs))
+
+    def eval_pairs(self, pairs) -> List[float]:
+        """pairs: [(job, samples)]. Returns per-pair accuracies,
+        bit-identical to [job.eval_on(s) for job, s in pairs], with
+        each distinct sample shape dispatched as one batched call."""
+        if not pairs:
+            return []
+        self.bank.compact()     # BEFORE capturing any slot index
+        if not self._bank_backed([j for j, _ in pairs]):
+            return [job.eval_on(s) for job, s in pairs]
+        out: List[float] = [0.0] * len(pairs)
+        arrs = [np.asarray(s) for _, s in pairs]
+        by_shape: Dict[tuple, List[int]] = {}
+        for i, a in enumerate(arrs):
+            by_shape.setdefault(a.shape, []).append(i)
+        stack = self.bank.params_stack()
+        for idxs in by_shape.values():
+            toks = np.stack([arrs[i] for i in idxs])
+            jids = np.array([pairs[i][0]._slot.idx for i in idxs])
+            for i, a in zip(idxs, self.batched_accuracy(stack, toks, jids)):
+                out[i] = float(a)
+        return out
+
+    def eval_jobs(self, jobs) -> List[float]:
+        """Batched RetrainJob.eval: every (member, job) subsample pair
+        of `jobs` scored in one fleet call, then averaged per job with
+        the same float64 np.mean the scalar path uses."""
+        pairs, spans = [], []
+        for j in jobs:
+            ms = list(j.members)
+            spans.append(len(ms))
+            pairs.extend((j, m.subsamples) for m in ms)
+        accs = self.eval_pairs(pairs)
+        out, k = [], 0
+        for n in spans:
+            out.append(float(np.mean(accs[k:k + n])) if n else 0.0)
+            k += n
+        return out
+
+    # -- vmapped train plane ------------------------------------------------
+    def _train_many_fn(self, steps: int) -> Callable:
+        fn = self._train_many.get(steps)
+        if fn is None:
+            fn = jax.jit(make_train_step_many(
+                self.model, self.tcfg, steps=steps,
+                distill_weight=self._distill_weight))
+            self._train_many[steps] = fn
+        return fn
+
+    def _train_job_scalar(self, job, toks):
+        """The seed per-job micro-window, with the batches pre-drawn."""
+        batches = [{"inputs": jnp.asarray(t), "labels": jnp.asarray(t)}
+                   for t in toks]
+        state, _ = self.train_steps(job.state, batches)
+        job.state = state
+
+    def train_micro_many(self, jobs) -> None:
+        """One micro-window for each job in `jobs`.
+
+        Batches are drawn on the host with each job's OWN rng in the
+        same order the scalar loop would draw them, then jobs whose
+        batches share a shape run as ONE vmapped multi-step call per
+        group; stragglers (pool smaller than the batch size, foreign
+        jobs, groups below batch_min_jobs) take the scalar path.
+        Either way the result is bit-identical to calling
+        job.train_micro() per job.
+        """
+        self.bank.compact()     # BEFORE capturing any slot index
+        groups: Dict[Tuple[int, tuple], List[tuple]] = {}
+        for job in jobs:
+            data = job.pool.rows()
+            if data.shape[0] == 0:
+                continue                       # train_micro no-ops
+            k = min(job.batch, data.shape[0])
+            toks = np.stack(
+                [data[job.rng.integers(0, data.shape[0], size=k)]
+                 for _ in range(job.micro_steps)])
+            job.gpu_time += 1
+            if (not self.batched or k != job.batch
+                    or not self._bank_backed([job])):
+                self._train_job_scalar(job, toks)
+                continue
+            groups.setdefault((job.micro_steps, toks.shape),
+                              []).append((job, toks))
+
+        for (steps, _shape), items in groups.items():
+            if len(items) < self.batch_min_jobs:
+                for job, toks in items:
+                    self._train_job_scalar(job, toks)
+                continue
+            n = len(items)
+            idxs = [job._slot.idx for job, _ in items]
+            batch_np = np.stack([t for _, t in items])  # (J, steps, k, S)
+            pad = _pad_size(n, floor=min(4, max(2, self.batch_min_jobs)))
+            if pad != n:            # pad lanes compute, never scatter
+                idxs = idxs + [idxs[0]] * (pad - n)
+                batch_np = np.concatenate(
+                    [batch_np] + [batch_np[:1]] * (pad - n))
+            states = self.bank.gather(idxs)
+            toks_dev = jnp.asarray(batch_np)
+            new_states, _ = self._train_many_fn(steps)(
+                states, {"inputs": toks_dev, "labels": toks_dev})
+            self.bank.scatter(idxs[:n],
+                              jax.tree.map(lambda x: x[:n], new_states))
+
 
 class RetrainJob:
-    """One group-retraining job (Alg. 1/2 unit)."""
+    """One group-retraining job (Alg. 1/2 unit): a thin handle over a
+    JobBank slot (the train-state) plus host-side bookkeeping (members,
+    token ring pool, rng). The duck-typed allocator/grouper interface
+    is unchanged from the seed."""
 
     def __init__(self, engine: SharedEngine, first: Request, *,
                  micro_steps: int = 4, batch: int = 8, seed: int = 0,
-                 init_state_tree=None):
+                 init_state_tree=None, pool_rows: int = 512):
         self.job_id = f"job{next(_job_counter)}"
         self.engine = engine
         self.members: List[Request] = []
-        self.pool: List[np.ndarray] = []      # (B,S) token arrays
-        self._pool_src: List[Optional[str]] = []   # stream per pool entry
-        self.soft_pool: List[np.ndarray] = [] # optional teacher soft labels
+        self.pool = TokenRingPool(pool_rows)
         self.micro_steps = micro_steps
         self.batch = batch
         self.rng = np.random.default_rng(seed)
-        self.state = (init_state_tree if init_state_tree is not None
-                      else (first.model if first.model is not None
-                            else engine.fresh_state(seed)))
+        init = (init_state_tree if init_state_tree is not None
+                else (first.model if first.model is not None
+                      else engine.fresh_state(seed)))
+        self._slot = engine.bank.alloc(init)
+        # dying jobs return their bank slot as soon as the last handle
+        # ref drops (mid-window death triggers swap-compaction)
+        self._finalizer = weakref.finalize(self, engine.bank.free,
+                                           self._slot)
         self.gpu_time = 0
         self.add_member(first)
+
+    # -- bank-backed state --------------------------------------------------
+    @property
+    def state(self):
+        """The job's {"params", "opt"} train-state, read from its bank
+        slot as an independent copy (safe to hold across compaction)."""
+        return self.engine.bank.read(self._slot.idx)
+
+    @state.setter
+    def state(self, tree):
+        self.engine.bank.write(self._slot.idx, tree)
+
+    def release(self):
+        """Return the bank slot (idempotent). Runs automatically when
+        the handle is garbage-collected."""
+        self._finalizer()
 
     # -- grouping interface ---------------------------------------------------
     @property
     def num_members(self) -> int:
         return len(self.members)
 
+    @property
+    def _pool_src(self) -> List[Optional[str]]:
+        """Per-row stream tags, oldest first (tests/inspection)."""
+        return self.pool.sources()
+
     def add_member(self, req: Request):
         self.members.append(req)
         if req.train_data is not None:
-            self.pool.append(np.asarray(req.train_data))
-            self._pool_src.append(req.stream_id)
+            self.pool.add(req.train_data, req.stream_id)
 
     def remove_member(self, stream_id: str):
         self.members = [m for m in self.members if m.stream_id != stream_id]
@@ -102,43 +600,27 @@ class RetrainJob:
         distribution no live member has. Eviction/regrouping does NOT
         purge — an evicted member's data contributed while it was a
         member (seed semantics, pinned by the golden traces)."""
-        keep = [i for i, src in enumerate(self._pool_src)
-                if src != stream_id]
-        self.pool = [self.pool[i] for i in keep]
-        self._pool_src = [self._pool_src[i] for i in keep]
+        self.pool.purge(stream_id)
 
     def eval_on(self, samples) -> float:
-        return self.engine.accuracy(self.state["params"], samples)
+        return self.engine.accuracy(
+            self.engine.bank.read_params(self._slot.idx), samples)
 
     # -- allocator interface ---------------------------------------------------
     def eval(self) -> float:
         """Accuracy averaged over member subsamples (A_j in Eq. 1)."""
         if not self.members:
             return 0.0
-        return float(np.mean([self.eval_on(m.subsamples)
-                              for m in self.members]))
+        return self.engine.eval_jobs([self])[0]
 
     def train_micro(self):
         """One micro-window: `micro_steps` SGD steps on pool batches."""
-        if not self.pool:
-            return
-        data = np.concatenate([p.reshape(-1, p.shape[-1]) for p in self.pool])
-        batches = []
-        for _ in range(self.micro_steps):
-            idx = self.rng.integers(0, data.shape[0],
-                                    size=min(self.batch, data.shape[0]))
-            toks = jnp.asarray(data[idx])
-            batches.append({"inputs": toks, "labels": toks})
-        self.state, _ = self.engine.train_steps(self.state, batches)
-        self.gpu_time += 1
+        self.engine.train_micro_many([self])
 
     # -- data plane -------------------------------------------------------------
     def ingest(self, tokens: np.ndarray, stream_id: Optional[str] = None):
         """New window data from a member's transmission. `stream_id`
-        attributes the entry so churn can purge a departed camera's
-        data (purge_stream_data)."""
-        self.pool.append(np.asarray(tokens))
-        self._pool_src.append(stream_id)
-        if len(self.pool) > 64:       # sliding data window
-            self.pool = self.pool[-64:]
-            self._pool_src = self._pool_src[-64:]
+        attributes each row so churn can purge a departed camera's
+        data (purge_stream_data). The ring pool evicts the OLDEST rows
+        once the row budget is exceeded."""
+        self.pool.add(tokens, stream_id)

@@ -118,6 +118,37 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, mesh=None, rules=None,
     return train_step
 
 
+def make_train_step_many(model: Model, tcfg: TrainConfig, *, steps: int = 1,
+                         mesh=None, rules=None, moe_impl: str = "dense",
+                         distill_weight: float = 0.0,
+                         ssm_impl: str = "gspmd"):
+    """vmap-compatible multi-step trainer over STACKED job states.
+
+    Returns train_steps_many(states, batches) -> (states, metrics):
+    `states` is a state pytree with a leading jobs axis on every leaf,
+    `batches` holds arrays of shape (jobs, steps, ...). Each lane runs
+    `steps` sequential train_step updates on its own state (lax.scan
+    keeps the compiled graph one-step-sized), so lane j is bit-identical
+    to running make_train_step on state j with its `steps` batches in
+    order — the JobBank parity suite asserts it. Metrics are the last
+    step's, stacked over jobs.
+    """
+    step = make_train_step(model, tcfg, mesh=mesh, rules=rules,
+                           moe_impl=moe_impl, distill_weight=distill_weight,
+                           ssm_impl=ssm_impl)
+
+    def train_steps_many(states, batches):
+        def per_job(state, bats):
+            def body(st, b):
+                st, metrics = step(st, b)
+                return st, metrics
+            st, metrics = jax.lax.scan(body, state, bats)
+            return st, jax.tree.map(lambda m: m[-1], metrics)
+        return jax.vmap(per_job)(states, batches)
+
+    return train_steps_many
+
+
 def init_state(model: Model, key, tcfg: Optional[TrainConfig] = None):
     params = model.init(key, jnp.dtype((tcfg or TrainConfig()).param_dtype))
     return {"params": params, "opt": opt_lib.init_opt_state(params)}

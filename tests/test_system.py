@@ -160,6 +160,29 @@ def test_member_signatures_track_recent_window(engine):
                                    atol=1e-6)
 
 
+def test_remove_stream_purges_request_time(engine):
+    """Churn regression: a departed camera must not linger in
+    request_time, or response_times() reports response latencies for
+    cameras no longer in the fleet."""
+    bank, streams = make_fleet(vocab=VOCAB, regions=1,
+                               streams_per_region=2, dim=4,
+                               switch_times=(5.0,), seed=5)
+    cc = ControllerConfig(window_micro=4, micro_steps=2, train_batch=8,
+                          drift_threshold=0.25, p_drop=0.5,
+                          shared_bandwidth=1e9)
+    ctl = ECCOController(engine, streams, cc, seed=0)
+    ctl.warmup()
+    for _ in range(2):
+        ctl.run_window()
+    gone = streams[0].stream_id
+    assert gone in ctl.request_time        # it did request retraining
+    ctl.remove_stream(gone)
+    assert gone not in ctl.request_time
+    assert gone not in ctl.response_times(threshold=0.0)
+    # the survivor's clock is untouched
+    assert streams[1].stream_id in ctl.request_time
+
+
 def test_controller_adapts_accuracy_over_windows():
     cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=VOCAB)
     engine = SharedEngine(cfg)

@@ -1,0 +1,355 @@
+"""Parity + unit suite for the stacked training plane (JobBank,
+TokenRingPool, vmapped SharedEngine executables).
+
+The batched paths must be BIT-IDENTICAL to the seed per-job loop —
+same float32 per-member accuracies, same SGD trajectories (same rng
+draws per job, same batch order) — so the allocator/grouper decisions
+they feed are pinned, not merely close. `SharedEngine(batched=False)`
+is the scalar reference twin: same model config and seeds produce the
+same initial states, so any divergence is the batched dispatch's.
+"""
+import dataclasses
+import gc
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import smoke_config
+from repro.core.allocator import ECCOAllocator, UniformAllocator
+from repro.core.grouping import Request
+from repro.core.trainer import (JobBank, RetrainJob, SharedEngine,
+                                TokenRingPool)
+
+VOCAB = 64
+SEQ = 16
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=VOCAB)
+    return SharedEngine(cfg), SharedEngine(cfg, batched=False)
+
+
+def _req(sid, toks, acc=0.0, t=0.0, loc=(0.0, 0.0)):
+    return Request(stream_id=sid, t=t, loc=loc, subsamples=toks, acc=acc,
+                   train_data=toks)
+
+
+def _data(rng, n, seq=SEQ):
+    return rng.integers(0, VOCAB, size=(n, seq))
+
+
+def _make_fleet(engine, *, jobs=3, members=3, batch=4, micro=2, seed0=0):
+    """Identically-seeded jobs on `engine`; rebuildable on the twin."""
+    out = []
+    for j in range(jobs):
+        rng = np.random.default_rng(100 + j)
+        job = RetrainJob(engine, _req(f"s{j}_0", _data(rng, 8)),
+                         micro_steps=micro, batch=batch, seed=seed0 + j)
+        for m in range(1, members):
+            job.add_member(_req(f"s{j}_{m}", _data(rng, 8)))
+        out.append(job)
+    return out
+
+
+def _states_equal(a, b) -> bool:
+    eq = jax.tree.map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)
+    return all(jax.tree.leaves(eq))
+
+
+# ---------------------------------------------------------------------------
+# TokenRingPool: row-budget eviction, ordering, purge
+# ---------------------------------------------------------------------------
+def test_ring_pool_matches_concat_order_under_capacity():
+    rng = np.random.default_rng(0)
+    pool = TokenRingPool(capacity_rows=64)
+    entries = [rng.integers(0, 9, size=(n, 8)) for n in (3, 1, 5)]
+    for i, e in enumerate(entries):
+        pool.add(e, f"s{i}")
+    np.testing.assert_array_equal(pool.rows(), np.concatenate(entries))
+    assert pool.sources() == ["s0"] * 3 + ["s1"] * 1 + ["s2"] * 5
+
+
+def test_ring_pool_evicts_by_rows_not_entries():
+    """The token budget is ROWS: variably-sized entries must not widen
+    the memory window. The kept/evicted boundary is exactly the newest
+    `capacity` rows — an old entry can survive partially."""
+    rng = np.random.default_rng(1)
+    pool = TokenRingPool(capacity_rows=8)
+    entries = [rng.integers(0, 9, size=(n, 4)) for n in (3, 4, 3)]
+    for i, e in enumerate(entries):
+        pool.add(e, f"s{i}")
+    # 10 rows total, budget 8 -> the 2 oldest rows of entry 0 evicted,
+    # its 3rd row kept (partial-entry boundary)
+    want = np.concatenate(entries)[-8:]
+    np.testing.assert_array_equal(pool.rows(), want)
+    assert pool.sources() == ["s0"] + ["s1"] * 4 + ["s2"] * 3
+    assert len(pool) == 8
+
+
+def test_ring_pool_oversized_entry_keeps_newest_rows():
+    rng = np.random.default_rng(2)
+    pool = TokenRingPool(capacity_rows=4)
+    big = rng.integers(0, 9, size=(10, 4))
+    pool.add(big, "s0")
+    np.testing.assert_array_equal(pool.rows(), big[-4:])
+    assert len(pool) == 4
+
+
+def test_ring_pool_wraparound_stays_ordered():
+    pool = TokenRingPool(capacity_rows=5)
+    for i in range(7):        # 7 one-row entries through a 5-row ring
+        pool.add(np.full((1, 3), i), f"s{i}")
+    np.testing.assert_array_equal(pool.rows()[:, 0], [2, 3, 4, 5, 6])
+    assert pool.sources() == [f"s{i}" for i in range(2, 7)]
+
+
+def test_ring_pool_purge_preserves_survivor_order():
+    pool = TokenRingPool(capacity_rows=6)
+    pool.add(np.full((2, 3), 0), "a")
+    pool.add(np.full((2, 3), 1), "b")
+    pool.add(np.full((2, 3), 2), "a")
+    pool.purge("a")
+    np.testing.assert_array_equal(pool.rows()[:, 0], [1, 1])
+    assert pool.sources() == ["b", "b"]
+    pool.add(np.full((1, 3), 3), "c")      # still usable after purge
+    np.testing.assert_array_equal(pool.rows()[:, 0], [1, 1, 3])
+
+
+def test_ingest_row_budget_boundary(engines):
+    """RetrainJob.ingest evicts by total pooled rows (token budget)."""
+    engine, _ = engines
+    rng = np.random.default_rng(3)
+    job = RetrainJob(engine, _req("s0", _data(rng, 2)), pool_rows=6)
+    job.ingest(_data(rng, 3), "s1")
+    job.ingest(_data(rng, 4), "s2")       # 9 rows -> oldest 3 evicted
+    assert len(job.pool) == 6
+    assert job._pool_src == ["s1", "s1", "s2", "s2", "s2", "s2"]
+
+
+# ---------------------------------------------------------------------------
+# JobBank: slot lifecycle, deferred free, swap-compaction
+# ---------------------------------------------------------------------------
+def test_bank_read_write_roundtrip(engines):
+    engine, _ = engines
+    bank = JobBank(engine)
+    s0, s1 = engine.fresh_state(0), engine.fresh_state(1)
+    a, b = bank.alloc(s0), bank.alloc(s1)
+    assert _states_equal(bank.read(a.idx), s0)
+    assert _states_equal(bank.read(b.idx), s1)
+    bank.write(a.idx, s1)
+    assert _states_equal(bank.read(a.idx), s1)
+
+
+def test_bank_capacity_doubles(engines):
+    engine, _ = engines
+    bank = JobBank(engine, capacity=2)
+    slots = [bank.alloc(engine.fresh_state(i)) for i in range(5)]
+    assert bank.capacity >= 5
+    for i, s in enumerate(slots):       # growth preserved every slot
+        assert _states_equal(bank.read(s.idx), engine.fresh_state(i))
+
+
+def test_bank_free_is_deferred_until_compact(engines):
+    """free() must not move rows (it runs from GC finalizers at
+    arbitrary points while batched callers hold captured indices);
+    compact() does the swap."""
+    engine, _ = engines
+    bank = JobBank(engine)
+    states = [engine.fresh_state(i) for i in range(3)]
+    slots = [bank.alloc(s) for s in states]
+    bank.free(slots[0])
+    assert slots[0].dead and slots[0].idx == 0      # queued, row intact
+    assert slots[2].idx == 2                        # nothing moved yet
+    assert _states_equal(bank.read(slots[2].idx), states[2])
+    bank.compact()
+    assert slots[0].idx is None
+    assert len(bank) == 2
+    # swap-compaction moved the LAST slot into the freed row and
+    # retargeted its handle
+    assert slots[2].idx == 0
+    assert _states_equal(bank.read(slots[2].idx), states[2])
+    assert _states_equal(bank.read(slots[1].idx), states[1])
+    bank.free(slots[0])                             # idempotent
+    bank.compact()
+    assert len(bank) == 2
+
+
+def test_use_after_release_raises(engines):
+    """numpy would treat a freed slot's idx=None as np.newaxis and
+    broadcast a state write across the WHOLE bank; the bank must fail
+    loudly instead."""
+    engine, _ = engines
+    rng = np.random.default_rng(11)
+    job = RetrainJob(engine, _req("uar0", _data(rng, 4)))
+    keep = job.state
+    job.release()
+    engine.bank.compact()
+    with pytest.raises(ValueError, match="use-after-release"):
+        job.state
+    with pytest.raises(ValueError, match="use-after-release"):
+        job.state = keep
+    with pytest.raises(ValueError, match="use-after-release"):
+        job.eval_on(_data(rng, 2))
+
+
+def test_job_handle_gc_returns_slot(engines):
+    engine, _ = engines
+    rng = np.random.default_rng(4)
+    gc.collect()
+    engine.bank.compact()        # settle earlier tests' dead handles
+    n0 = len(engine.bank)
+    job = RetrainJob(engine, _req("gc0", _data(rng, 4)))
+    assert len(engine.bank) == n0 + 1
+    del job
+    gc.collect()
+    engine.bank.compact()
+    assert len(engine.bank) == n0
+
+
+# ---------------------------------------------------------------------------
+# eval-plane parity: batched_accuracy / eval_pairs / eval_jobs
+# ---------------------------------------------------------------------------
+def test_batched_accuracy_bit_identical_to_scalar(engines):
+    engine, _ = engines
+    rng = np.random.default_rng(5)
+    jobs = _make_fleet(engine, jobs=3, members=3)
+    # include a 1-member job
+    solo = RetrainJob(engine, _req("solo", _data(rng, 8)), seed=9)
+    jobs.append(solo)
+    pairs = [(j, m.subsamples) for j in jobs for m in j.members]
+    batched = engine.eval_pairs(pairs)
+    scalar = [j.eval_on(s) for j, s in pairs]
+    assert batched == scalar                 # exact float equality
+    # the (P,)-pairs primitive agrees too
+    jids = np.array([j._slot.idx for j, _ in pairs])
+    toks = np.stack([np.asarray(s) for _, s in pairs])
+    accs = engine.batched_accuracy(engine.bank.params_stack(), toks, jids)
+    assert [float(a) for a in accs] == scalar
+
+
+def test_eval_jobs_matches_scalar_eval(engines):
+    engine, scalar_engine = engines
+    jobs = _make_fleet(engine, jobs=3, members=2)
+    ref = [float(np.mean([j.eval_on(m.subsamples) for m in j.members]))
+           for j in jobs]
+    assert engine.eval_jobs(jobs) == ref
+    assert [j.eval() for j in jobs] == ref
+    # the scalar twin produces the same numbers for the same seeds
+    twin = _make_fleet(scalar_engine, jobs=3, members=2)
+    assert [j.eval() for j in twin] == ref
+
+
+def test_eval_parity_on_just_compacted_slot(engines):
+    engine, _ = engines
+    jobs = _make_fleet(engine, jobs=3, members=2, seed0=20)
+    ref = {j.job_id: [j.eval_on(m.subsamples) for m in j.members]
+           for j in jobs}
+    victim = jobs.pop(1)
+    victim.release()                 # queued; compacted inside eval_pairs
+    pairs = [(j, m.subsamples) for j in jobs for m in j.members]
+    got = engine.eval_pairs(pairs)
+    want = [a for j in jobs for a in ref[j.job_id]]
+    assert got == want
+
+
+def test_mixed_sample_shapes_batch_per_shape(engines):
+    engine, _ = engines
+    rng = np.random.default_rng(6)
+    jobs = _make_fleet(engine, jobs=2, members=1, seed0=30)
+    pairs = [(jobs[0], _data(rng, 8)), (jobs[1], _data(rng, 4)),
+             (jobs[0], _data(rng, 4)), (jobs[1], _data(rng, 8))]
+    assert engine.eval_pairs(pairs) == [j.eval_on(s) for j, s in pairs]
+
+
+# ---------------------------------------------------------------------------
+# train-plane parity: train_micro_many vs sequential train_micro
+# ---------------------------------------------------------------------------
+def test_train_micro_many_bit_identical_to_sequential(engines):
+    """Identical params after N micro-windows under identical rng:
+    full-batch jobs ride the vmapped executable, a straggler (pool <
+    batch) exercises the in-dispatch scalar fallback."""
+    engine, scalar_engine = engines
+    # 4 full-batch jobs: at the default batch_min_jobs=4 they ride the
+    # vmapped executable (3 or fewer would all take the scalar path)
+    fast = _make_fleet(engine, jobs=4, members=2, batch=4, seed0=40)
+    slow = _make_fleet(scalar_engine, jobs=4, members=2, batch=4, seed0=40)
+    rng = np.random.default_rng(7)
+    straggler_data = _data(rng, 2)          # 2 rows < batch 4
+    fast.append(RetrainJob(engine, _req("st", straggler_data),
+                           micro_steps=2, batch=4, seed=77))
+    slow.append(RetrainJob(scalar_engine, _req("st", straggler_data),
+                           micro_steps=2, batch=4, seed=77))
+    for _ in range(3):                      # N micro-windows
+        engine.train_micro_many(fast)
+        for j in slow:
+            j.train_micro()
+    for f, s in zip(fast, slow):
+        assert _states_equal(f.state, s.state), f.job_id
+        assert f.gpu_time == s.gpu_time == 3
+    # and the post-training accuracies agree exactly
+    pairs_f = [(j, m.subsamples) for j in fast for m in j.members]
+    pairs_s = [(j, m.subsamples) for j in slow for m in j.members]
+    assert engine.eval_pairs(pairs_f) == \
+        [j.eval_on(s) for j, s in pairs_s]
+
+
+def test_train_micro_many_skips_empty_pools(engines):
+    engine, _ = engines
+    rng = np.random.default_rng(8)
+    job = RetrainJob(engine, Request(stream_id="e0", t=0.0, loc=(0, 0),
+                                     subsamples=_data(rng, 4), acc=0.0))
+    assert len(job.pool) == 0
+    before = job.state
+    engine.train_micro_many([job])
+    assert job.gpu_time == 0                # seed no-op semantics
+    assert _states_equal(job.state, before)
+
+
+def test_mid_window_job_death_leaves_survivors_intact(engines):
+    """A job dying mid-window (handle dropped -> finalizer -> deferred
+    free -> compaction inside the next fleet call) must not perturb any
+    survivor's state or subsequent training."""
+    engine, scalar_engine = engines
+    fast = _make_fleet(engine, jobs=4, members=2, seed0=60)
+    slow = _make_fleet(scalar_engine, jobs=4, members=2, seed0=60)
+    engine.train_micro_many(fast)
+    for j in slow:
+        j.train_micro()
+    # job 1 dies mid-window on both engines
+    del fast[1], slow[1]
+    gc.collect()
+    engine.train_micro_many(fast)           # compacts, then trains
+    for j in slow:
+        j.train_micro()
+    for f, s in zip(fast, slow):
+        assert _states_equal(f.state, s.state), f.job_id
+    pairs = [(j, m.subsamples) for j in fast for m in j.members]
+    assert engine.eval_pairs(pairs) == \
+        [j.eval_on(m.subsamples) for j in slow for m in j.members]
+
+
+# ---------------------------------------------------------------------------
+# allocator decision parity: batched engine vs scalar twin
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("alloc_cls", [ECCOAllocator, UniformAllocator])
+def test_allocator_decisions_identical_batched_vs_scalar(engines, alloc_cls):
+    engine, scalar_engine = engines
+    fast = _make_fleet(engine, jobs=3, members=2, seed0=80)
+    slow = _make_fleet(scalar_engine, jobs=3, members=2, seed0=80)
+    # canonicalize: job ids differ (global counter), map by position
+    tf = alloc_cls().run_window(fast, window_micro=7)
+    ts = alloc_cls().run_window(slow, window_micro=7)
+    fmap = {j.job_id: f"g{i}" for i, j in enumerate(fast)}
+    smap = {j.job_id: f"g{i}" for i, j in enumerate(slow)}
+    assert [fmap[x] for x in tf.order] == [smap[x] for x in ts.order]
+    assert {fmap[k]: v for k, v in tf.shares.items()} == \
+        {smap[k]: v for k, v in ts.shares.items()}
+    assert {fmap[k]: v for k, v in tf.gpu_time.items()} == \
+        {smap[k]: v for k, v in ts.gpu_time.items()}
+    assert {fmap[k]: v for k, v in tf.acc.items()} == \
+        {smap[k]: v for k, v in ts.acc.items()}
