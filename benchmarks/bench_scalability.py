@@ -11,9 +11,14 @@ Three sections:
 
 `--smoke` (or SMOKE=1) shrinks every axis for CI: the point there is
 that scenario/benchmark code paths execute, not the numbers.
+
+Results go to stdout as CSV rows AND to BENCH_scalability.json (next
+to BENCH_trainer.json) so the fleet-scale perf trajectory is
+machine-readable across PRs; CI's bench-smoke job uploads both.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -29,6 +34,8 @@ from repro.testing.trace import run_scenario
 WINDOWS = 8
 BUDGET = 8          # micro-windows/window, fixed while streams grow
 ACC_THRESHOLD = 0.4
+
+OUT_JSON = "BENCH_scalability.json"
 
 
 def _scalability(rows: Rows, engine, windows: int, sizes):
@@ -132,6 +139,18 @@ def run(smoke: bool = False):
         _scalability(rows, engine, windows=WINDOWS, sizes=(1, 2, 4))
         _drift_speedup(rows, sizes=(1000, 10000))
         _scenarios(rows, engine)         # scenario-native horizons
+    # response times can legitimately be inf (no stream recrossed the
+    # accuracy threshold) and accuracies NaN (no graded window); strict
+    # JSON has no tokens for either, so map non-finite floats to null
+    # rather than emitting an artifact jq/JSON.parse reject
+    metrics = {k: (None if isinstance(v, float) and not np.isfinite(v)
+                   else v)
+               for k, v in rows.metrics.items()}
+    with open(OUT_JSON, "w") as f:
+        json.dump({"smoke": smoke, "metrics": metrics}, f, indent=1,
+                  allow_nan=False)
+        f.write("\n")
+    rows.add("json_out", OUT_JSON)
     return rows.emit()
 
 

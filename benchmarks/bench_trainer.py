@@ -15,6 +15,15 @@ Both paths are asserted bit-identical while being timed (the parity
 suite in tests/test_trainer_bank.py pins the semantics; here it guards
 the benchmark itself). Results go to stdout as CSV rows and to
 BENCH_trainer.json so the perf trajectory is tracked across PRs.
+
+Each sweep also records the JobBank residency-cache counters
+(TransferStats) around its timed region: `*_sync` columns report
+host<->device STATE crossings (sync events + bytes). The batched
+passes run on the device-resident bank and must show ZERO syncs per
+timed pass — asserted here — while the host-resident scalar twin pays
+a full state round-trip per job per micro-window; that per-call
+transfer is exactly what the slot cache removes on launch-bound
+accelerators.
 """
 from __future__ import annotations
 
@@ -46,8 +55,20 @@ OUT_JSON = "BENCH_trainer.json"
 
 
 def _scalar_engine() -> SharedEngine:
+    # the seed twin: no vmapped dispatch AND the host-resident bank, so
+    # its transfer counters show the per-job state round-trips the
+    # device-resident cache eliminates
     cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=VOCAB)
-    return SharedEngine(cfg, batched=False)
+    return SharedEngine(cfg, batched=False, resident=False)
+
+
+def _sync_cols(rows: Rows, tag: str, before: dict, after: dict) -> dict:
+    """Diff two TransferStats snapshots into CSV rows + a JSON blob."""
+    d = {k: after[k] - before[k] for k in before}
+    rows.add(f"{tag}_h2d_syncs", d["h2d_syncs"])
+    rows.add(f"{tag}_d2h_syncs", d["d2h_syncs"])
+    rows.add(f"{tag}_state_bytes", d["h2d_bytes"] + d["d2h_bytes"])
+    return d
 
 
 def _fleet(engine, members: int, *, seed0: int = 0):
@@ -97,9 +118,16 @@ def _eval_plane(rows: Rows, engine, sizes, results):
                   for j, s in pairs]
         t_scalar = time.perf_counter() - t0
 
+        before = engine.bank.stats.snapshot()
         t0 = time.perf_counter()
         batched = engine.eval_pairs(pairs)
         t_batched = time.perf_counter() - t0
+        sync = _sync_cols(rows, f"eval_n{members}_batched", before,
+                          engine.bank.stats.snapshot())
+        # the resident fleet was flushed by the warm call: the timed
+        # batched pass must not move ANY state across the host boundary
+        assert sync["h2d_syncs"] == 0 and sync["d2h_syncs"] == 0, \
+            "batched eval pass transferred bank state"
 
         assert batched == scalar, "eval plane drifted from scalar loop"
         sp = t_scalar / max(t_batched, 1e-9)
@@ -109,7 +137,7 @@ def _eval_plane(rows: Rows, engine, sizes, results):
         results["eval_plane"].append(dict(
             members=members, jobs=len(jobs), pairs=len(pairs),
             scalar_s=round(t_scalar, 4), batched_s=round(t_batched, 4),
-            speedup=round(sp, 2)))
+            speedup=round(sp, 2), batched_sync=sync))
         for j in jobs:
             j.release()
 
@@ -131,16 +159,24 @@ def _train_plane(rows: Rows, engine, scalar_engine, sizes, results,
         for j in slow:
             j.train_micro()
 
+        before = engine.bank.stats.snapshot()
         t0 = time.perf_counter()
         for _ in range(micro_windows):
             engine.train_micro_many(fast)
         t_batched = time.perf_counter() - t0
+        bsync = _sync_cols(rows, f"train_n{members}_batched", before,
+                           engine.bank.stats.snapshot())
+        assert bsync["h2d_syncs"] == 0 and bsync["d2h_syncs"] == 0, \
+            "batched train pass transferred bank state"
 
+        before = scalar_engine.bank.stats.snapshot()
         t0 = time.perf_counter()
         for _ in range(micro_windows):
             for j in slow:
                 j.train_micro()
         t_scalar = time.perf_counter() - t0
+        ssync = _sync_cols(rows, f"train_n{members}_scalar", before,
+                           scalar_engine.bank.stats.snapshot())
 
         for f, s in zip(fast, slow):
             af = engine.eval_pairs([(f, m.subsamples)
@@ -155,7 +191,7 @@ def _train_plane(rows: Rows, engine, scalar_engine, sizes, results,
             members=members, jobs=len(fast),
             micro_windows=micro_windows,
             scalar_s=round(t_scalar, 4), batched_s=round(t_batched, 4),
-            speedup=round(sp, 2)))
+            speedup=round(sp, 2), batched_sync=bsync, scalar_sync=ssync))
         for j in fast + slow:
             j.release()
 

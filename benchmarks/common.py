@@ -48,14 +48,18 @@ def run_framework(framework: str, engine: SharedEngine, streams,
 
 
 class Rows:
-    """CSV row collector: benchmark,metric,value."""
+    """CSV row collector: benchmark,metric,value. Raw (unformatted)
+    values are kept in `metrics` so benchmarks can persist a
+    machine-readable JSON next to the stdout CSV."""
 
     def __init__(self, bench: str):
         self.bench = bench
         self.rows: List[str] = []
+        self.metrics: Dict[str, object] = {}
         self.t0 = time.time()
 
     def add(self, metric: str, value):
+        self.metrics[metric] = value
         if isinstance(value, float):
             value = f"{value:.4f}"
         self.rows.append(f"{self.bench},{metric},{value}")

@@ -44,7 +44,7 @@ def main():
     from repro.core.trainer import RetrainJob, SharedEngine
     from repro.data.streams import DomainBank
     from repro.distributed.checkpoint import (AsyncCheckpointer,
-                                              latest_step, restore)
+                                              latest_step, restore_job)
 
     if args.tiny:
         cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=256)
@@ -99,11 +99,13 @@ def main():
             ckpt.save_async(done, job.state, extra={"acc": float(acc)})
 
     # failure drill: clobber the job state, restore from checkpoint
+    # (restore_job writes through the JobBank residency cache — the
+    # device row is re-flushed by the next train/eval call)
     ckpt.wait()
     step = latest_step(args.ckpt_dir)
     print(f"\nsimulating failure; restoring from checkpoint step {step}")
     job.state = jax.tree.map(jnp.zeros_like, job.state)
-    job.state, extra = restore(args.ckpt_dir, step, job.state)
+    extra = restore_job(args.ckpt_dir, step, job)
     acc = engine.accuracy(job.state["params"], ev)
     print(f"restored: acc={acc:.3f} (checkpointed acc={extra['acc']:.3f})")
     assert abs(acc - extra["acc"]) < 1e-3, "restore mismatch"

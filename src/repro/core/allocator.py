@@ -99,6 +99,11 @@ class ECCOAllocator:
         # launches. Bit-identical to the per-job micro_retraining loop:
         # jobs are independent (own state, own rng, own pool), so
         # reordering eval/train across jobs changes nothing per job.
+        # Each entry point compacts the bank and flushes host-dirty
+        # state rows to the device-resident stack before capturing slot
+        # indices (the residency contract in repro.core.batching), so
+        # the measurement pass itself moves no state across the host
+        # boundary.
         head = jobs[:min(budget, len(jobs))]
         eng = shared_engine(head) if head else None
         if eng is not None:

@@ -11,14 +11,26 @@ enabled. Callers fall back to the seed per-job loop on None. The
 batched and scalar paths are bit-identical
 (tests/test_trainer_bank.py), so the probe only decides dispatch
 cost, never decisions.
+
+Residency contract (docs/training_plane.md): dispatch sites never
+touch bank rows directly. A probe-positive engine guarantees that its
+batched entry points (eval_pairs / eval_jobs / train_micro_many)
+compact the bank AND flush host-dirty rows (`bank.sync_to_device`)
+BEFORE capturing any slot index, so host-side state writes made since
+the last fleet call — checkpoint restores, model-zoo seeding,
+`job.state = ...` — are visible to the fleet call without the caller
+doing anything. An engine whose bank lacks the compact/sync protocol
+cannot uphold that ordering, so the probe rejects it and the caller
+stays on the scalar loop.
 """
 from __future__ import annotations
 
 
 def shared_engine(jobs):
     """The batch-capable SharedEngine shared by every job in `jobs`,
-    or None (empty set, fake test jobs, mixed engines, freed slots, or
-    engine.batched=False)."""
+    or None (empty set, fake test jobs, mixed engines, freed slots,
+    engine.batched=False, or a bank missing the residency sync
+    protocol)."""
     eng = None
     for j in jobs:
         e = getattr(j, "engine", None)
@@ -35,5 +47,9 @@ def shared_engine(jobs):
         return None
     for attr in ("eval_jobs", "eval_pairs", "train_micro_many"):
         if not callable(getattr(eng, attr, None)):
+            return None
+    bank = getattr(eng, "bank", None)
+    for attr in ("compact", "sync_to_device", "params_stack"):
+        if bank is None or not callable(getattr(bank, attr, None)):
             return None
     return eng

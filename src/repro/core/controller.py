@@ -209,7 +209,9 @@ class ECCOController:
 
         # metrics: eval samples stay per-stream draws (each stream owns
         # its rng, drawn in fleet order), scoring is ONE batched fleet
-        # call instead of a device launch per stream
+        # call instead of a device launch per stream; the call reads
+        # the device-resident param rows directly (zero per-member
+        # state transfer — the bank syncs any host-dirty rows at entry)
         acc = {}
         by_stream = self._jobs_by_stream()
         evs = {}

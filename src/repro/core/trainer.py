@@ -18,9 +18,23 @@ jobs via vmap over the stacked states. `RetrainJob` stays the thin
 duck-typed handle the allocator/grouper drive; the batched paths are
 bit-identical to its scalar loop (tests/test_trainer_bank.py), so they
 change dispatch cost, never decisions.
+
+Residency (the device-resident slot cache): by default the bank's
+stacked leaves are committed jax arrays living on the accelerator (or
+the CPU backend's device memory), with a per-slot host/device validity
+bitmap. Batched entry points flush host-dirty rows in ONE scatter and
+then gather/scatter directly on the resident stack — zero per-member
+host transfer — while the scalar fallback reads/writes individual rows
+via dynamic_slice/dynamic_update_slice on the same stack. Host reads
+(`job.state`, checkpointing, RECL's model-zoo snapshots) sync lazily,
+one row at a time, into a host mirror. `JobBank.stats` counts every
+host<->device crossing of bank state; `resident=False` restores the
+host-resident layout (the exactness-first mode PR 3 shipped), and both
+modes are bit-identical (tests/test_trainer_bank.py).
 """
 from __future__ import annotations
 
+import functools
 import itertools
 import weakref
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -153,24 +167,129 @@ class _Slot:
         self.dead = False
 
 
+class TransferStats:
+    """Host<->device crossings of bank STATE (train-state rows; batch
+    data is excluded — it originates on the host either way).
+
+    One `sync` is one transfer event regardless of how many rows it
+    carries, `bytes` is the payload that actually crossed (including
+    shape-grid pad lanes), so "zero per-member round-trips" is
+    directly checkable: the batched entry points must add 0 syncs
+    once the fleet is resident. benchmarks/bench_trainer.py snapshots
+    these around its timed passes; the parity suite asserts them.
+    """
+    __slots__ = ("h2d_syncs", "h2d_bytes", "d2h_syncs", "d2h_bytes")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        self.h2d_syncs = self.h2d_bytes = 0
+        self.d2h_syncs = self.d2h_bytes = 0
+
+    def h2d(self, nbytes: int):
+        self.h2d_syncs += 1
+        self.h2d_bytes += int(nbytes)
+
+    def d2h(self, nbytes: int):
+        self.d2h_syncs += 1
+        self.d2h_bytes += int(nbytes)
+
+    def snapshot(self) -> Dict[str, int]:
+        return {k: getattr(self, k) for k in self.__slots__}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _dev_rows_set(stack, sel, rows):
+    """stack[sel] = rows on device (donated: updates in place where the
+    backend supports donation). `sel` may contain duplicates only if
+    the duplicated rows are identical (the padding convention)."""
+    return jax.tree.map(lambda x, r: x.at[sel].set(r), stack, rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _dev_row_set(stack, idx, row):
+    """stack[idx] = row via dynamic_update_slice — the scalar-fallback
+    write path (one row, zero host transfer)."""
+    return jax.tree.map(
+        lambda x, r: jax.lax.dynamic_update_slice(
+            x, r[None], (idx,) + (0,) * r.ndim), stack, row)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _dev_rows_move(stack, dst, src):
+    """stack[dst] = stack[src] for index VECTORS — swap-compaction's
+    device-side moves as one launch however many slots died. The
+    gathers all read the pre-update stack (functional semantics), so
+    callers resolve move chains to original sources host-side."""
+    return jax.tree.map(lambda x: x.at[dst].set(x[src]), stack)
+
+
+def _pad_sel_rows(sel: np.ndarray, rows):
+    """Pad a scatter's (sel, rows) to the {2^k, 3*2^(k-2)} size grid by
+    duplicating the last entry (duplicate index + identical row is a
+    well-defined scatter), so _dev_rows_set compiles for ~2 shapes per
+    octave instead of one per fleet-churn pattern."""
+    k = int(sel.size)
+    p = _pad_size(k, floor=1)
+    if p == k:
+        return sel, rows
+    sel = np.concatenate([sel, np.repeat(sel[-1:], p - k)])
+    xp = jax.tree.map(
+        lambda r: (np.concatenate([r] + [r[-1:]] * (p - k))
+                   if isinstance(r, np.ndarray)
+                   else jnp.concatenate([r] + [r[-1:]] * (p - k))), rows)
+    return sel, xp
+
+
 class JobBank:
     """All job train-states in ONE stacked pytree.
 
-    Leaves are host arrays of shape (capacity, ...): capacity grows by
+    Leaves are arrays of shape (capacity, ...): capacity grows by
     amortized doubling, job death swap-compacts the dead row with the
     last live one (same discipline as FleetDriftDetector rows), and
     the vmapped executables gather/scatter only the slots they touch.
     Reads return independent copies — a bank row may be overwritten by
     compaction after the caller lets go of its job handle.
+
+    Residency: with `resident=True` (the default) the authoritative
+    stack is a committed jax array pytree on the default device; a host
+    numpy mirror stages checkpoint/zoo/state reads and writes. Two
+    per-slot bitmaps track which side is current (`_host_ok`,
+    `_dev_ok`; at least one is set for every live row):
+
+      * host writes (`write`, i.e. `job.state = ...`, checkpoint
+        restore, model-zoo seeding) land in the mirror and mark the
+        device row stale;
+      * `sync_to_device()` — run by every batched entry point AFTER
+        `compact()`, before slot indices are captured — flushes ALL
+        host-dirty rows in one batched scatter;
+      * device writes (`scatter`, `write_row_device`) mark the mirror
+        stale; host reads (`read`, `read_params`) re-sync lazily, one
+        row at a time.
+
+    Rule for new call sites: capture `params_stack()` (device leaves,
+    borrowed) right before the fleet call and never cache it across a
+    bank write/compaction — the resident buffers are donated to the
+    update kernels. `gather`/`row_device` return fresh buffers and are
+    safe to hold.
     """
 
-    def __init__(self, engine: "SharedEngine", capacity: int = 4):
+    def __init__(self, engine: "SharedEngine", capacity: int = 4,
+                 resident: Optional[bool] = None):
         self.engine = engine
         self._cap = int(capacity)
-        self._stack = None           # state pytree, leaves (cap, ...)
+        self.resident = True if resident is None else bool(resident)
+        self._host = None            # numpy mirror, leaves (cap, ...)
+        self._dev = None             # committed jax stack (resident)
         self._treedef = None
         self._slots: List[_Slot] = []
         self._dead: List[_Slot] = []
+        self._host_ok = np.zeros(self._cap, bool)
+        self._dev_ok = np.zeros(self._cap, bool)
+        self.stats = TransferStats()
+        self.state_row_nbytes = 0    # one slot's full train-state
+        self.params_row_nbytes = 0   # one slot's params subtree
 
     def __len__(self) -> int:
         """Live slots, including dead-but-not-yet-compacted ones."""
@@ -182,9 +301,18 @@ class JobBank:
 
     def _init_stack(self, template):
         leaves, self._treedef = jax.tree.flatten(template)
-        self._stack = jax.tree.unflatten(self._treedef, [
+        self._host = jax.tree.unflatten(self._treedef, [
             np.zeros((self._cap,) + np.shape(x), np.asarray(x).dtype)
             for x in leaves])
+        self.state_row_nbytes = int(sum(
+            np.asarray(x).nbytes for x in leaves))
+        if isinstance(template, dict) and "params" in template:
+            self.params_row_nbytes = int(sum(
+                np.asarray(x).nbytes
+                for x in jax.tree.leaves(template["params"])))
+        if self.resident:
+            self._dev = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype), self._host)
 
     def _grow_to(self, need: int):
         """Amortized doubling: allocating the Nth job is O(state), not
@@ -193,11 +321,20 @@ class JobBank:
             return
         new_cap = max(need, 2 * self._cap)
         pad = new_cap - self._cap
-        if self._stack is not None:
-            self._stack = jax.tree.map(
+        if self._host is not None:
+            self._host = jax.tree.map(
                 lambda x: np.concatenate(
                     [x, np.zeros((pad,) + x.shape[1:], x.dtype)]),
-                self._stack)
+                self._host)
+        if self._dev is not None:
+            self._dev = jax.tree.map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]),
+                self._dev)
+        self._host_ok = np.concatenate(
+            [self._host_ok, np.zeros(pad, bool)])
+        self._dev_ok = np.concatenate(
+            [self._dev_ok, np.zeros(pad, bool)])
         self._cap = new_cap
 
     def _state_leaves(self, state) -> List:
@@ -210,7 +347,7 @@ class JobBank:
 
     def alloc(self, state) -> _Slot:
         self.compact()
-        if self._stack is None:
+        if self._host is None:
             self._init_stack(state)
         self._grow_to(len(self._slots) + 1)
         slot = _Slot(len(self._slots))
@@ -237,19 +374,59 @@ class JobBank:
     def compact(self):
         """Swap-with-last removal of every queued-dead slot, keeping
         live rows dense (capacity is retained; rows beyond len(self)
-        are garbage). Only called at deterministic safe points."""
+        are garbage). Moves both the host mirror row and — when it is
+        current — the resident device row, carrying the validity bits
+        with them; the vacated tail row's bits are cleared so a future
+        alloc at that position cannot inherit stale cache state.
+        Device moves are DEFERRED and applied as one batched launch:
+        a mass-churn window freeing K jobs costs one device call, not
+        K. Swap chains (a survivor moved into a hole later becoming
+        the move source of another hole) are resolved host-side to
+        original row indices, because the batched kernel's gathers all
+        read the pre-update stack. Only called at deterministic safe
+        points."""
+        dev_moves: Dict[int, int] = {}     # dst row -> ORIGINAL src row
+        src_of: Dict[int, int] = {}        # current row -> original row
         while self._dead:
             slot = self._dead.pop()
             idx = slot.idx
             last = len(self._slots) - 1
             if idx != last:
                 moved = self._slots[last]
-                for x in jax.tree.leaves(self._stack):
-                    x[idx] = x[last]
+                # a stale mirror row is garbage by definition — only
+                # copy host bytes when the mirror is authoritative
+                if self._host_ok[last]:
+                    for x in jax.tree.leaves(self._host):
+                        x[idx] = x[last]
+                self._host_ok[idx] = bool(self._host_ok[last])
+                if self._dev is not None:
+                    if self._dev_ok[last]:
+                        orig = src_of.pop(last, last)
+                        dev_moves[idx] = orig
+                        src_of[idx] = orig
+                    else:
+                        # idx now holds a host-authoritative row; any
+                        # earlier device move into it is moot (the row
+                        # is marked device-stale below either way)
+                        dev_moves.pop(idx, None)
+                        src_of.pop(idx, None)
+                    self._dev_ok[idx] = bool(self._dev_ok[last])
                 moved.idx = idx
                 self._slots[idx] = moved
             self._slots.pop()
+            self._host_ok[last] = False
+            self._dev_ok[last] = False
+            dev_moves.pop(last, None)      # fell off the live range
+            src_of.pop(last, None)
             slot.idx = None
+        if dev_moves:
+            dst = np.fromiter(dev_moves.keys(), np.int32,
+                              count=len(dev_moves))
+            src = np.fromiter(dev_moves.values(), np.int32,
+                              count=len(dev_moves))
+            dst, src = _pad_sel_rows(dst, src)
+            self._dev = _dev_rows_move(self._dev, jnp.asarray(dst),
+                                       jnp.asarray(src))
 
     @staticmethod
     def _check_idx(idx):
@@ -260,40 +437,159 @@ class JobBank:
             raise ValueError("use-after-release: job's bank slot was freed")
         return idx
 
+    # -- residency sync protocol -------------------------------------------
+    def sync_to_device(self):
+        """Flush every host-dirty row into the resident stack as ONE
+        batched scatter (one h2d sync, not one per row). Every batched
+        entry point runs this after compact(), before capturing slot
+        indices; no-op in host mode or when nothing is dirty."""
+        if not self.resident or self._host is None:
+            return
+        if self._dev is None:
+            self._dev = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype), self._host)
+        live = len(self._slots)
+        dirty = np.flatnonzero(self._host_ok[:live] & ~self._dev_ok[:live])
+        if dirty.size == 0:
+            return
+        rows = jax.tree.map(lambda x: x[dirty], self._host)
+        sel, rows = _pad_sel_rows(dirty.astype(np.int32), rows)
+        self._dev = _dev_rows_set(self._dev, jnp.asarray(sel),
+                                  jax.tree.map(jnp.asarray, rows))
+        self._dev_ok[dirty] = True
+        # bytes = the payload that actually crossed, incl. pad lanes
+        self.stats.h2d(int(sel.size) * self.state_row_nbytes)
+
+    def _sync_row_to_host(self, idx: int):
+        """Lazy d2h: pull the device row into the host mirror only when
+        the mirror is stale (the row was last written by a batched or
+        scalar-fallback device call). Repeat reads are free."""
+        if self._host_ok[idx]:
+            return
+        row = jax.device_get(jax.tree.map(lambda x: x[idx], self._dev))
+        for dst, src in zip(jax.tree.leaves(self._host),
+                            jax.tree.leaves(row)):
+            dst[idx] = src
+        self._host_ok[idx] = True
+        self.stats.d2h(self.state_row_nbytes)
+
+    # -- host-side reads/writes (checkpoints, model zoo, job.state) --------
     def read(self, idx: int):
-        """Slot `idx`'s state as an independent pytree copy."""
+        """Slot `idx`'s state as an independent host pytree copy
+        (lazily synced from the device when stale)."""
         self._check_idx(idx)
-        return jax.tree.map(lambda x: np.array(x[idx]), self._stack)
+        self._sync_row_to_host(idx)
+        return jax.tree.map(lambda x: np.array(x[idx]), self._host)
 
     def read_params(self, idx: int):
-        """Params-only copy of slot `idx` — the eval hot path doesn't
-        pay for copying the Adam moments (~2x params)."""
+        """Params-only host copy of slot `idx` — the eval hot path
+        doesn't pay for copying the Adam moments (~2x params)."""
         self._check_idx(idx)
+        self._sync_row_to_host(idx)
         return jax.tree.map(lambda x: np.array(x[idx]),
-                            self._stack["params"])
+                            self._host["params"])
+
+    def read_template(self, idx: int):
+        """Slot `idx`'s state as a shape/dtype/structure TEMPLATE: the
+        host mirror row WITHOUT syncing, so the VALUES are unspecified
+        when the device row is authoritative. For structure-only
+        consumers (checkpoint restore targets) that would otherwise
+        pay a full-row d2h just to throw the numbers away. Leaves are
+        READ-ONLY views — mutating them would bypass the dirty-bit
+        write protocol (use `write` / `job.state = ...`)."""
+        self._check_idx(idx)
+
+        def leaf(x):
+            v = x[idx]
+            if isinstance(v, np.ndarray):
+                v = v.view()
+                v.flags.writeable = False
+            return v
+        return jax.tree.map(leaf, self._host)
 
     def write(self, idx: int, state):
+        """Host write-through: lands in the mirror and marks the device
+        row stale; the next batched entry point's sync_to_device()
+        carries it across in the shared flush."""
         self._check_idx(idx)
-        for dst, src in zip(jax.tree.leaves(self._stack),
+        for dst, src in zip(jax.tree.leaves(self._host),
                             self._state_leaves(state)):
             dst[idx] = np.asarray(src)
+        self._host_ok[idx] = True
+        self._dev_ok[idx] = False
 
+    # -- device-side row access (scalar fallback) ---------------------------
+    def row_device(self, idx: int):
+        """Slot `idx`'s full state sliced from the resident stack on
+        device (fresh buffers, zero host transfer)."""
+        self._check_idx(idx)
+        self.sync_to_device()
+        return jax.tree.map(lambda x: x[idx], self._dev)
+
+    def params_row_device(self, idx: int):
+        """Params subtree of slot `idx` on device — the scalar eval
+        path's zero-transfer read."""
+        self._check_idx(idx)
+        self.sync_to_device()
+        return jax.tree.map(lambda x: x[idx], self._dev["params"])
+
+    def write_row_device(self, idx: int, state):
+        """Scalar-fallback write: ONE row updated in the resident stack
+        via dynamic_update_slice (donated; zero host transfer). The
+        host mirror row goes stale and re-syncs lazily on read."""
+        self._check_idx(idx)
+        self._state_leaves(state)          # validates the treedef
+        self._dev = _dev_row_set(self._dev, jnp.int32(idx), state)
+        self._dev_ok[idx] = True
+        self._host_ok[idx] = False
+
+    # -- batched access (vmapped executables) -------------------------------
     def gather(self, idxs: Sequence[int]):
         """Stacked device states for the selected slots (leaves
-        (k, ...)) — the input of the vmapped executables."""
+        (k, ...)) — the input of the vmapped executables. Resident mode
+        slices the device stack (zero host transfer after the shared
+        flush); host mode pays one h2d of the k rows."""
         sel = np.asarray(idxs, np.int64)
-        return jax.tree.map(lambda x: jnp.asarray(x[sel]), self._stack)
+        if self.resident:
+            self.sync_to_device()
+            dsel = jnp.asarray(sel)
+            return jax.tree.map(lambda x: x[dsel], self._dev)
+        self.stats.h2d(int(sel.size) * self.state_row_nbytes)
+        return jax.tree.map(lambda x: jnp.asarray(x[sel]), self._host)
 
     def scatter(self, idxs: Sequence[int], states):
+        """Write the vmapped executables' output states back. Resident
+        mode scatters on device and marks the host mirror stale (zero
+        host transfer); host mode pays one d2h of the k rows."""
         sel = np.asarray(idxs, np.int64)
-        for dst, src in zip(jax.tree.leaves(self._stack),
+        if self.resident:
+            if sel.size == 0:
+                return
+            self._state_leaves(states)     # validates the treedef
+            psel, rows = _pad_sel_rows(sel.astype(np.int32), states)
+            self._dev = _dev_rows_set(self._dev, jnp.asarray(psel),
+                                      jax.tree.map(jnp.asarray, rows))
+            self._dev_ok[sel] = True
+            self._host_ok[sel] = False
+            return
+        for dst, src in zip(jax.tree.leaves(self._host),
                             self._state_leaves(states)):
             dst[sel] = np.asarray(src)
+        self.stats.d2h(int(sel.size) * self.state_row_nbytes)
 
     def params_stack(self):
         """The stacked params subtree (leaves (capacity, ...)) —
-        `batched_accuracy`'s params_stack argument."""
-        return None if self._stack is None else self._stack["params"]
+        `batched_accuracy`'s params_stack argument. Resident mode
+        returns the DEVICE leaves (synced first). BORROWED: valid only
+        until the next bank write/scatter/compaction (the resident
+        buffers are donated to the update kernels), so capture it right
+        before the fleet call — the engine entry points already do."""
+        if self._host is None:
+            return None
+        if self.resident:
+            self.sync_to_device()
+            return self._dev["params"]
+        return self._host["params"]
 
 
 class SharedEngine:
@@ -306,11 +602,16 @@ class SharedEngine:
     the vmapped dispatch everywhere (the duck-typed probe in
     repro.core.batching reports the engine as not batch-capable), which
     the parity tests and benchmarks use as the reference scalar twin.
+    `resident=False` keeps the JobBank host-resident (PR 3's layout);
+    the default keeps all job states device-resident and both the
+    batched paths and the scalar fallback operate on the resident stack
+    with zero per-call host transfer of state.
     """
 
     def __init__(self, cfg: ModelConfig, tcfg: Optional[TrainConfig] = None,
                  *, distill_weight: float = 1.0, batched: bool = True,
-                 eval_chunk: int = 128, batch_min_jobs: int = 4):
+                 eval_chunk: int = 128, batch_min_jobs: int = 4,
+                 resident: Optional[bool] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         # b2=0.999 + no decay: the small-batch streaming regime needs the
@@ -337,7 +638,7 @@ class SharedEngine:
         # the scalar step (identical numbers, and small fleets skip the
         # vmapped-executable compile entirely)
         self.batch_min_jobs = int(batch_min_jobs)
-        self.bank = JobBank(self)
+        self.bank = JobBank(self, resident=resident)
 
         # flattened fleet eval: a job's members ride the EXAMPLE axis of
         # one forward (params read once per job, GEMMs see M*B rows);
@@ -406,9 +707,15 @@ class SharedEngine:
             groups.setdefault(int(j), []).append(i)
         m_chunk = max(1, self.eval_chunk // b)     # members per flat call
         fn = self._acc_flat_fn(b)
+        # a resident stack is sliced per job ON DEVICE (zero transfer);
+        # host leaves pay one params-row h2d per job
+        host_stack = any(isinstance(x, np.ndarray)
+                         for x in jax.tree.leaves(params_stack))
         for jid, members in groups.items():
-            params = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[jid]),
+            params = jax.tree.map(lambda x: jnp.asarray(x[jid]),
                                   params_stack)
+            if host_stack:
+                self.bank.stats.h2d(self.bank.params_row_nbytes)
             for lo in range(0, len(members), m_chunk):
                 sel = members[lo:lo + m_chunk]
                 m = len(sel)
@@ -419,14 +726,30 @@ class SharedEngine:
                 out[sel] = np.asarray(res)[:m]
         return out
 
+    def _bank_slot(self, job) -> Optional[int]:
+        """The job's live slot index in THIS engine's bank, else None
+        (foreign engines, duck-typed fakes, freed/dying slots)."""
+        slot = getattr(job, "_slot", None)
+        if (getattr(job, "engine", None) is self and slot is not None
+                and slot.idx is not None and not slot.dead):
+            return slot.idx
+        return None
+
     def _bank_backed(self, jobs) -> bool:
-        def live(j):
-            slot = getattr(j, "_slot", None)
-            return (slot is not None and slot.idx is not None
-                    and not slot.dead)
-        return (self.batched and self.bank.params_stack() is not None
-                and all(getattr(j, "engine", None) is self and live(j)
-                        for j in jobs))
+        return (self.batched and len(self.bank) > 0
+                and all(self._bank_slot(j) is not None for j in jobs))
+
+    def _eval_slot(self, idx, samples) -> float:
+        """Scalar eval of one bank slot. Resident mode slices the job's
+        params on device (dynamic row read of the resident stack, zero
+        host transfer); the host-resident bank copies the row out and
+        pays the implicit params h2d at dispatch."""
+        if self.bank.resident:
+            return float(self._acc(self.bank.params_row_device(idx),
+                                   jnp.asarray(samples)))
+        params = self.bank.read_params(idx)
+        self.bank.stats.h2d(self.bank.params_row_nbytes)
+        return self.accuracy(params, samples)
 
     def eval_pairs(self, pairs) -> List[float]:
         """pairs: [(job, samples)]. Returns per-pair accuracies,
@@ -477,9 +800,24 @@ class SharedEngine:
         return fn
 
     def _train_job_scalar(self, job, toks):
-        """The seed per-job micro-window, with the batches pre-drawn."""
+        """The seed per-job micro-window, with the batches pre-drawn.
+
+        A bank-backed job on a resident bank reads and writes its state
+        row ON DEVICE (dynamic_slice / dynamic_update_slice on the
+        resident stack — zero host round-trip per micro-window); the
+        legacy `job.state` path remains for duck-typed foreign jobs and
+        the host-resident bank, where the whole state crosses the
+        boundary twice per micro-window."""
         batches = [{"inputs": jnp.asarray(t), "labels": jnp.asarray(t)}
                    for t in toks]
+        idx = self._bank_slot(job)
+        if idx is not None and self.bank.resident:
+            state, _ = self.train_steps(self.bank.row_device(idx), batches)
+            self.bank.write_row_device(idx, state)
+            return
+        if idx is not None:
+            self.bank.stats.h2d(self.bank.state_row_nbytes)
+            self.bank.stats.d2h(self.bank.state_row_nbytes)
         state, _ = self.train_steps(job.state, batches)
         job.state = state
 
@@ -506,7 +844,7 @@ class SharedEngine:
                  for _ in range(job.micro_steps)])
             job.gpu_time += 1
             if (not self.batched or k != job.batch
-                    or not self._bank_backed([job])):
+                    or self._bank_slot(job) is None):
                 self._train_job_scalar(job, toks)
                 continue
             groups.setdefault((job.micro_steps, toks.shape),
@@ -571,6 +909,13 @@ class RetrainJob:
     def state(self, tree):
         self.engine.bank.write(self._slot.idx, tree)
 
+    @property
+    def state_template(self):
+        """Shape/structure template of the train-state (values
+        unspecified; no device sync) — what checkpoint restore loads
+        against."""
+        return self.engine.bank.read_template(self._slot.idx)
+
     def release(self):
         """Return the bank slot (idempotent). Runs automatically when
         the handle is garbage-collected."""
@@ -603,8 +948,7 @@ class RetrainJob:
         self.pool.purge(stream_id)
 
     def eval_on(self, samples) -> float:
-        return self.engine.accuracy(
-            self.engine.bank.read_params(self._slot.idx), samples)
+        return self.engine._eval_slot(self._slot.idx, samples)
 
     # -- allocator interface ---------------------------------------------------
     def eval(self) -> float:

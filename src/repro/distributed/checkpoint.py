@@ -13,6 +13,14 @@ the returned handle joins in tests / at the next save.
 Restore supports *resharding*: arrays are loaded on host then placed with
 jax.device_put against the (possibly different) target shardings, which
 is what elastic re-meshing needs after losing a slice.
+
+Retraining-job states live in the JobBank's device-resident slot cache
+(docs/training_plane.md): reading `job.state` for a save lazily syncs
+that job's row to the host (one d2h, cached for repeat saves), and
+`restore_job` writes the loaded state back THROUGH the cache — the
+assignment lands in the host mirror and marks the device row stale, so
+the next batched fleet call carries it to the accelerator in its one
+shared host->device flush. Callers never touch bank rows directly.
 """
 from __future__ import annotations
 
@@ -137,3 +145,23 @@ def restore(ckpt_dir: str, step: int, target_tree, *,
         loaded = [jax.device_put(a, s) for a, s in
                   zip(loaded, shard_leaves)]
     return jax.tree.unflatten(treedef, loaded), manifest["extra"]
+
+
+def restore_job(ckpt_dir: str, step: int, job):
+    """Restore a retraining job's train-state IN PLACE, writing through
+    the JobBank residency cache.
+
+    The checkpoint is loaded against the job's shape/structure
+    template (`state_template` when the job offers one — no device
+    sync, since restore discards the target's values — else a plain
+    `job.state` read), and the assignment goes through the state
+    setter — i.e. `JobBank.write` — which stages the restored state in
+    the host mirror and invalidates the device row. The next batched
+    entry point flushes it in the fleet-wide sync; no caller-side
+    device plumbing. Returns the manifest's `extra` dict."""
+    template = getattr(job, "state_template", None)
+    if template is None:
+        template = job.state
+    tree, extra = restore(ckpt_dir, step, template)
+    job.state = tree
+    return extra

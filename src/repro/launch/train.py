@@ -102,14 +102,15 @@ def main(argv=None):
     for w in range(args.windows):
         if args.fail_at_window is not None and w == args.fail_at_window \
                 and ckpt is not None and ctl.jobs:
-            # simulate losing the job's device state mid-run
-            from repro.distributed.checkpoint import latest_step, restore
+            # simulate losing the job's device state mid-run; the
+            # restore writes through the JobBank residency cache and is
+            # flushed to the device by the next fleet call
+            from repro.distributed.checkpoint import latest_step, restore_job
             ckpt.wait()
             step = latest_step(args.ckpt_dir)
             if step is not None:
                 j = ctl.jobs[0]
-                restored, extra = restore(args.ckpt_dir, step, j.state)
-                j.state = restored
+                extra = restore_job(args.ckpt_dir, step, j)
                 print(f"[w{w}] recovered job {j.job_id} from "
                       f"checkpoint step {step} (window {extra.get('window')})")
         wm = ctl.run_window()

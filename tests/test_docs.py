@@ -1,0 +1,60 @@
+"""Documentation link integrity: every intra-repo link in the repo's
+markdown surface (README.md, docs/, ROADMAP.md, ...) must resolve to a
+file or directory that exists, so the README/architecture pointers
+can't rot as modules move. External URLs and pure anchors are skipped;
+CI's docs job runs this plus the README quickstart command.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+# [text](target) — excluding images' "!" prefix is irrelevant here:
+# image targets must resolve too
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# bare `path` references in the docs we also promise stay valid
+_CODE_PATH = re.compile(
+    r"`((?:src|docs|tests|benchmarks|examples)/[A-Za-z0-9_./-]+)`")
+
+
+def _md_files():
+    files = sorted(REPO.glob("*.md")) + sorted(REPO.glob("docs/*.md"))
+    assert files, "no markdown files found — wrong repo root?"
+    return files
+
+
+def _targets(md: Path):
+    """(target, base_dir) pairs: markdown links resolve relative to the
+    file; backtick code paths are written repo-root-relative."""
+    text = md.read_text()
+    for m in _LINK.finditer(text):
+        yield m.group(1), md.parent
+    for m in _CODE_PATH.finditer(text):
+        yield m.group(1), REPO
+
+
+@pytest.mark.parametrize("md", _md_files(), ids=lambda p: str(p.relative_to(REPO)))
+def test_intra_repo_links_resolve(md):
+    missing = []
+    for target, base in _targets(md):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (base / path).resolve().exists():
+            missing.append(target)
+    assert not missing, (
+        f"{md.relative_to(REPO)} has dangling intra-repo links: {missing}")
+
+
+def test_readme_and_architecture_exist():
+    """The documentation surface the ROADMAP promises."""
+    for p in ("README.md", "docs/architecture.md", "docs/scenarios.md",
+              "docs/training_plane.md"):
+        assert (REPO / p).is_file(), p

@@ -32,6 +32,14 @@ def engines():
     return SharedEngine(cfg), SharedEngine(cfg, batched=False)
 
 
+@pytest.fixture(scope="module")
+def host_engine():
+    """Batched engine on the HOST-resident bank (PR 3's layout) — the
+    residency-parity reference twin."""
+    cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=VOCAB)
+    return SharedEngine(cfg, resident=False)
+
+
 def _req(sid, toks, acc=0.0, t=0.0, loc=(0.0, 0.0)):
     return Request(stream_id=sid, t=t, loc=loc, subsamples=toks, acc=acc,
                    train_data=toks)
@@ -177,6 +185,30 @@ def test_bank_free_is_deferred_until_compact(engines):
     bank.free(slots[0])                             # idempotent
     bank.compact()
     assert len(bank) == 2
+
+
+def test_mass_churn_compaction_resolves_swap_chains(engines):
+    """Several queued deaths compact as ONE batched device move; a
+    swap CHAIN (the survivor moved into one hole becomes the move
+    source for the next) must resolve to original rows, because the
+    batched kernel's gathers all read the pre-update stack."""
+    engine, _ = engines
+    bank = JobBank(engine)
+    states = [engine.fresh_state(i) for i in range(6)]
+    slots = [bank.alloc(s) for s in states]
+    # round-trip through gather/scatter: every row device-authoritative
+    bank.scatter(list(range(6)), bank.gather(list(range(6))))
+    assert not bank._host_ok[:6].any()
+    # free 0 and 4; compact pops 4 first (row 5 -> 4), then 0
+    # (row 4 -> 0) — the second move's source holds row 5's content
+    bank.free(slots[0])
+    bank.free(slots[4])
+    bank.compact()
+    assert len(bank) == 4
+    assert slots[5].idx == 0 and slots[0].idx is None
+    for orig, slot in ((1, slots[1]), (2, slots[2]), (3, slots[3]),
+                       (5, slots[5])):
+        assert _states_equal(bank.read(slot.idx), states[orig]), orig
 
 
 def test_use_after_release_raises(engines):
@@ -336,6 +368,138 @@ def test_mid_window_job_death_leaves_survivors_intact(engines):
 # ---------------------------------------------------------------------------
 # allocator decision parity: batched engine vs scalar twin
 # ---------------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+# residency: device-resident slot cache vs host-resident bank
+# ---------------------------------------------------------------------------
+def test_residency_parity_across_churn(engines, host_engine):
+    """Device- and host-resident banks must produce bit-identical
+    eval/train results through alloc/free/compaction churn: a job dies
+    mid-window (GC finalizer -> deferred free -> compaction inside the
+    next fleet call), a slot is explicitly released, and a new job
+    allocates into the recycled row."""
+    dev_e, _ = engines
+    dev = _make_fleet(dev_e, jobs=5, members=2, seed0=200)
+    host = _make_fleet(host_engine, jobs=5, members=2, seed0=200)
+
+    def window(tag):
+        dev_e.train_micro_many(dev)
+        host_engine.train_micro_many(host)
+        pd = [(j, m.subsamples) for j in dev for m in j.members]
+        ph = [(j, m.subsamples) for j in host for m in j.members]
+        assert dev_e.eval_pairs(pd) == host_engine.eval_pairs(ph), tag
+
+    window("warm")
+    # mid-window death on both fleets (handle dropped, GC'd)
+    del dev[1], host[1]
+    gc.collect()
+    window("after-death")
+    # explicit release; the next alloc recycles the compacted row
+    dev.pop(2).release()
+    host.pop(2).release()
+    data = _data(np.random.default_rng(9), 8)
+    dev.append(RetrainJob(dev_e, _req("rnew", data), micro_steps=2,
+                          batch=4, seed=300))
+    host.append(RetrainJob(host_engine, _req("rnew", data), micro_steps=2,
+                           batch=4, seed=300))
+    window("after-recycle")
+    for d, h in zip(dev, host):
+        assert _states_equal(d.state, h.state)
+    # the allocator's measured decisions agree on both banks (its
+    # greedy tail also exercises the scalar fallback on each)
+    td = ECCOAllocator().run_window(dev, window_micro=9)
+    th = ECCOAllocator().run_window(host, window_micro=9)
+    dmap = {j.job_id: f"g{i}" for i, j in enumerate(dev)}
+    hmap = {j.job_id: f"g{i}" for i, j in enumerate(host)}
+    assert [dmap[x] for x in td.order] == [hmap[x] for x in th.order]
+    assert {dmap[k]: v for k, v in td.acc.items()} == \
+        {hmap[k]: v for k, v in th.acc.items()}
+    assert {dmap[k]: v for k, v in td.shares.items()} == \
+        {hmap[k]: v for k, v in th.shares.items()}
+
+
+def test_batched_calls_zero_per_member_transfers(engines):
+    """Once the fleet is resident, batched entry points must move NO
+    state across the host boundary — not per member, not even per call
+    (the PR 3 follow-up the device-resident slot cache closes)."""
+    engine, _ = engines
+    gc.collect()
+    engine.bank.compact()            # settle earlier tests' dead handles
+    jobs = _make_fleet(engine, jobs=4, members=3, seed0=400)
+    pairs = [(j, m.subsamples) for j in jobs for m in j.members]
+    engine.eval_pairs(pairs)         # flushes the freshly-alloc'd states
+    engine.train_micro_many(jobs)
+    s = engine.bank.stats
+    s.reset()
+    engine.eval_pairs(pairs)
+    engine.train_micro_many(jobs)
+    engine.eval_jobs(jobs)
+    assert (s.h2d_syncs, s.d2h_syncs) == (0, 0)
+    assert (s.h2d_bytes, s.d2h_bytes) == (0, 0)
+
+
+def test_host_reads_sync_lazily_and_cache(engines):
+    """`job.state` pulls the device row at most once per invalidation:
+    the first read after a device-side train pays one d2h row sync, a
+    repeat read is free, and the next batched train re-invalidates."""
+    engine, _ = engines
+    jobs = _make_fleet(engine, jobs=4, members=2, seed0=420)
+    engine.train_micro_many(jobs)    # rows now device-authoritative
+    s = engine.bank.stats
+    s.reset()
+    st = jobs[0].state
+    assert s.d2h_syncs == 1
+    assert s.d2h_bytes == engine.bank.state_row_nbytes
+    assert _states_equal(st, jobs[0].state)     # mirror hit: no new sync
+    assert s.d2h_syncs == 1
+    engine.train_micro_many(jobs)
+    assert s.h2d_syncs == 0          # trained on resident rows directly
+    jobs[0].state
+    assert s.d2h_syncs == 2
+
+
+def test_host_write_visible_to_fleet_calls(engines):
+    """A host-side state write (`job.state = ...`: checkpoint restore,
+    model-zoo seeding) must reach the resident stack via the next
+    batched entry point's shared flush — ONE h2d sync, and the fleet
+    call scores the new state bit-identically."""
+    engine, _ = engines
+    jobs = _make_fleet(engine, jobs=2, members=1, seed0=440)
+    a, b = jobs
+    data = a.members[0].subsamples
+    engine.train_micro_many([a])     # make a's state distinct from b's
+    ref = a.eval_on(data)
+    b.state = a.state
+    s = engine.bank.stats
+    s.reset()
+    assert engine.eval_pairs([(b, data)]) == [ref]
+    assert s.h2d_syncs == 1
+    assert s.h2d_bytes == engine.bank.state_row_nbytes
+
+
+def test_checkpoint_restore_writes_through_cache(engines, tmp_path):
+    """save reads through the lazy host sync; restore_job writes back
+    through the cache and the restored row is what fleet calls see."""
+    from repro.distributed.checkpoint import restore_job, save
+
+    engine, _ = engines
+    rng = np.random.default_rng(13)
+    job = RetrainJob(engine, _req("ck0", _data(rng, 8)), micro_steps=2,
+                     batch=4, seed=7)
+    data = job.members[0].subsamples
+    job.train_micro()                # device-authoritative row
+    snap = job.state
+    acc0 = job.eval_on(data)
+    save(str(tmp_path), 3, job.state, extra={"acc": acc0})
+    job.train_micro()                # diverge past the snapshot
+    s = engine.bank.stats
+    s.reset()
+    extra = restore_job(str(tmp_path), 3, job)
+    assert s.d2h_syncs == 0          # template is structure-only: the
+    assert s.h2d_syncs == 0          # restore itself moves no state
+    assert _states_equal(job.state, snap)
+    assert job.eval_on(data) == acc0 == extra["acc"]
+
+
 @pytest.mark.parametrize("alloc_cls", [ECCOAllocator, UniformAllocator])
 def test_allocator_decisions_identical_batched_vs_scalar(engines, alloc_cls):
     engine, scalar_engine = engines
