@@ -1,4 +1,4 @@
-"""Paper Fig. 11 + Table 1: the resource-aware transmission controller.
+"""Paper Fig. 11 + Table 1 + Fig. 5 + the fleet decision plane.
 
 (a) Fig. 11 left — accuracy vs shared bandwidth with the controller ON
     (GAIMD alpha = p_j/n_j) vs OFF (fixed sampling, plain AIMD),
@@ -7,18 +7,40 @@
     GPU-proportional target (proportionality error metric).
 (c) Table 1 — equal vs GPU-proportional bandwidth split, accuracy of a
     2-stream workload whose GPU shares are 30/70.
+(d) Fig. 5 — PROFILE the sampling-config table for real: retrain the
+    reduced model under each (rate, resolution at the stream width)
+    config at each budget level, record the accuracy, then run the
+    bandwidth_contention scenario end to end with the profiled table
+    (the §3.2 pipeline the controller actually executes).
+(e) decision plane — scalar `TransmissionController.decide` loop vs
+    `FleetTransmissionPlane.decide_many` at 100/1k/10k flows
+    (parity-asserted while timed), the warm-vs-cold GAIMD
+    steps-to-convergence, and the proportionality error of realized
+    rates vs the alpha/(1-beta) targets. Every flow's delivered tokens
+    are asserted <= its bandwidth budget. Results persist to
+    BENCH_transmission.json (CI bench-smoke uploads it).
 """
 from __future__ import annotations
+
+import json
+import os
+import sys
+import time
 
 import numpy as np
 
 from benchmarks.common import Rows, make_engine, run_framework
 from repro.core import gaimd
+from repro.core import transmission as tx
 from repro.core.grouping import Request
 from repro.core.trainer import RetrainJob
+from repro.data.scenarios import build_scenario
 from repro.data.streams import DomainBank, make_fleet
+from repro.testing.trace import run_scenario
 
 VOCAB = 64
+SEQ = 32
+OUT_JSON = "BENCH_transmission.json"
 
 
 def _fig11_left(rows, engine):
@@ -75,7 +97,7 @@ def _table1(rows, engine):
     rng = np.random.default_rng(0)
 
     def req(sid, dom):
-        toks = bank.sample(dom, rng, 4, 32)
+        toks = bank.sample(dom, rng, 4, SEQ)
         return Request(stream_id=sid, t=0.0, loc=(0, 0),
                        subsamples=toks, acc=0.0, train_data=toks)
 
@@ -87,14 +109,14 @@ def _table1(rows, engine):
         for w in range(6):
             # bandwidth -> sequences deliverable (1 seq = 32 tokens = 1
             # bandwidth unit here)
-            ja.ingest(bank.sample(0, rng, max(1, int(bw_a * 2)), 32))
-            jb.ingest(bank.sample(2, rng, max(1, int(bw_b * 2)), 32))
+            ja.ingest(bank.sample(0, rng, max(1, int(bw_a * 2)), SEQ))
+            jb.ingest(bank.sample(2, rng, max(1, int(bw_b * 2)), SEQ))
             for _ in range(micro_a):
                 ja.train_micro()
             for _ in range(micro_b):
                 jb.train_micro()
-        ea = bank.sample(0, rng, 16, 32)
-        eb = bank.sample(2, rng, 16, 32)
+        ea = bank.sample(0, rng, 16, SEQ)
+        eb = bank.sample(2, rng, 16, SEQ)
         return (engine.accuracy(ja.state["params"], ea),
                 engine.accuracy(jb.state["params"], eb))
 
@@ -111,14 +133,188 @@ def _table1(rows, engine):
              int((a_pr + b_pr) >= (a_eq + b_eq)))
 
 
-def run():
+# ---------------------------------------------------------------------------
+# (d) Fig. 5: profile the table for real, then run §3.2 end to end
+# ---------------------------------------------------------------------------
+def _fig5_profile(rows, engine, results, *, levels=2, windows=2):
+    """Retrain the reduced model under each sampling config at each
+    budget level (budget level -> micro-windows of accelerator time)
+    and record the reached accuracy — the profiled (levels, configs)
+    matrix ProfileTable.best_many selects from."""
+    bank = DomainBank(VOCAB, 4, dim=4, seed=0)
+    rng = np.random.default_rng(0)
+    dom = 1
+    configs = [tx.SamplingConfig(r, SEQ) for r in (2, 4, 8)]
+    table = tx.ProfileTable(configs)
+    evals = bank.sample(dom, rng, 16, SEQ)
+    prof = []
+    for lvl in range(levels):
+        micro = 1 + lvl                  # budget level -> training time
+        for i, cfg in enumerate(configs):
+            job = RetrainJob(
+                engine,
+                Request(stream_id=f"prof{lvl}_{i}", t=0.0, loc=(0, 0),
+                        subsamples=evals, acc=0.0,
+                        train_data=bank.sample(dom, rng, cfg.rate, SEQ)),
+                micro_steps=4, batch=8, seed=0)
+            for _ in range(windows):
+                job.ingest(bank.sample(dom, rng, cfg.rate,
+                                       cfg.resolution))
+                for _ in range(micro):
+                    job.train_micro()
+            acc = float(engine.accuracy(job.state["params"], evals))
+            table.record(lvl, i, acc)
+            prof.append(dict(level=lvl, rate=cfg.rate,
+                             resolution=cfg.resolution,
+                             tokens=cfg.tokens, acc=round(acc, 4)))
+            rows.add(f"fig5_l{lvl}_r{cfg.rate}_acc", acc)
+            job.release()
+    results["fig5_profile"] = prof
+    return table
+
+
+def _contention_end_to_end(rows, engine, table, results, *, windows=4):
+    """bandwidth_contention with the PROFILED table: the full §3.2
+    pipeline (table lookup -> f*/n_j -> GAIMD -> compression) in the
+    controller loop. Asserts the bandwidth-cap invariant on every
+    delivered window."""
+    sc = build_scenario("bandwidth_contention", seed=0, windows=windows)
+    ctl = run_scenario("ecco", sc, engine=engine, window_micro=4,
+                       micro_steps=2, train_batch=8,
+                       profile_table=table)
+    checked = 0
+    for wm in ctl.history:
+        for sid, d in wm.delivered.items():
+            budget = wm.bandwidth[sid] * ctl.cc.window_seconds \
+                / ctl.cc.bytes_per_token
+            assert d <= budget, \
+                f"flow {sid} delivered {d} > budget {budget}"
+            checked += 1
+    assert checked > 0, "no transmission decisions exercised"
+    rows.add("contention_profiled_acc", ctl.mean_accuracy(last_k=2))
+    rows.add("contention_budget_checks", checked)
+    results["contention"] = dict(
+        acc=round(ctl.mean_accuracy(last_k=2), 4),
+        budget_checks=checked,
+        gaimd_steps_last_window=ctl.tx_plane.last_steps)
+
+
+# ---------------------------------------------------------------------------
+# (e) decision plane: scalar loop vs batched, 100/1k/10k flows
+# ---------------------------------------------------------------------------
+def _decision_plane(rows, results, sizes, *, window_seconds=10.0,
+                    bytes_per_token=2.0):
+    cfgs = [tx.SamplingConfig(r, q) for r in (2, 4, 8)
+            for q in (16, 32, 64)]
+    table = tx.ProfileTable(cfgs)
+    rng = np.random.default_rng(7)
+    for lvl in range(4):
+        for i in range(len(cfgs)):
+            table.record(lvl, i, float(rng.uniform(0.2, 0.9)))
+    ctrl = tx.TransmissionController(table,
+                                     bytes_per_token=bytes_per_token)
+    for n in sizes:
+        shares = rng.uniform(0.05, 1.0, n)
+        members = rng.integers(1, 8, n)
+        bw = rng.uniform(0.0, 64.0, n)
+        bw[:: max(1, n // 16)] = 0.0          # mix in dead uplinks
+        levels = [int(l) for l in rng.integers(0, 5, n)]
+        budgets = [float(b) for b in rng.uniform(16, 700, n)]
+        plane = tx.FleetTransmissionPlane(
+            table, bytes_per_token=bytes_per_token)
+
+        def run_scalar():
+            return [ctrl.decide(gpu_budget_level=levels[i],
+                                token_budget=budgets[i],
+                                p_share=float(shares[i]),
+                                n_members=int(members[i]),
+                                achieved_bandwidth=float(bw[i]),
+                                window_seconds=window_seconds)
+                    for i in range(n)]
+
+        def run_batched():
+            return plane.decide_many(budget_levels=levels,
+                                     token_budgets=budgets,
+                                     p_shares=shares, n_members=members,
+                                     achieved_bw=bw,
+                                     window_seconds=window_seconds)
+
+        def best_of(fn, repeats=5):
+            # sub-ms regions: warm once, report the best of several
+            # passes so allocator/cache jitter doesn't swamp the signal
+            out, best = fn(), np.inf
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                out = fn()
+                best = min(best, time.perf_counter() - t0)
+            return out, best
+
+        scalar, t_scalar = best_of(run_scalar)
+        batch, t_batched = best_of(run_batched)
+
+        assert batch.as_decisions() == scalar, \
+            "decision plane drifted from scalar loop"
+        # no flow's delivered tokens may exceed its bandwidth budget
+        budget_tokens = bw * window_seconds / bytes_per_token
+        assert (batch.delivered <= budget_tokens).all(), \
+            "a flow delivered beyond its bandwidth budget"
+        assert (batch.delivered[bw == 0.0] == 0).all()
+
+        # proportionality of a realized allocation vs the decisions'
+        # alpha/(1-beta) targets (the §3.2 reporting loop). Without
+        # local caps the synchronized-loss fluid model is EXACTLY
+        # proportional, so cap a slice of uplinks to make the error a
+        # live metric (capped flows pin, the rest split the remainder)
+        caps = np.full(n, np.inf, np.float32)
+        caps[:: max(1, n // 8)] = 0.5
+        realized = plane.allocate([f"f{i}" for i in range(n)], shares,
+                                  members, caps,
+                                  shared_cap=float(n * 2.0))
+        err = gaimd.proportionality_error(realized, batch.target_rate)
+        steps_cold = plane.last_steps
+        realized2 = plane.allocate([f"f{i}" for i in range(n)], shares,
+                                   members, caps,
+                                   shared_cap=float(n * 2.0))
+        steps_warm = plane.last_steps
+        err2 = gaimd.proportionality_error(realized2, batch.target_rate)
+
+        sp = t_scalar / max(t_batched, 1e-9)
+        rows.add(f"decide_n{n}_scalar_s", t_scalar)
+        rows.add(f"decide_n{n}_batched_s", t_batched)
+        rows.add(f"decide_n{n}_speedup", sp)
+        rows.add(f"decide_n{n}_prop_err", err)
+        rows.add(f"decide_n{n}_gaimd_steps_cold", steps_cold)
+        rows.add(f"decide_n{n}_gaimd_steps_warm", steps_warm)
+        results["decision_plane"].append(dict(
+            flows=n, scalar_s=round(t_scalar, 5),
+            batched_s=round(t_batched, 5), speedup=round(sp, 2),
+            proportionality_error=round(err, 5),
+            proportionality_error_warm=round(err2, 5),
+            gaimd_steps_cold=steps_cold, gaimd_steps_warm=steps_warm,
+            gaimd_steps_seed=4000))   # the fixed budget the seed burnt
+
+
+def run(smoke: bool = False):
     rows = Rows("transmission")
     engine = make_engine()
+    results = {"smoke": smoke, "decision_plane": []}
     _fig11_right(rows)
-    _table1(rows, engine)
-    _fig11_left(rows, engine)
+    if smoke:
+        _decision_plane(rows, results, (100, 1000))
+        table = _fig5_profile(rows, engine, results, levels=2, windows=1)
+        _contention_end_to_end(rows, engine, table, results, windows=3)
+    else:
+        _decision_plane(rows, results, (100, 1000, 10000))
+        table = _fig5_profile(rows, engine, results)
+        _contention_end_to_end(rows, engine, table, results)
+        _table1(rows, engine)
+        _fig11_left(rows, engine)
+    with open(OUT_JSON, "w") as f:
+        json.dump(results, f, indent=1)
+        f.write("\n")
+    rows.add("json_out", OUT_JSON)
     return rows.emit()
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv[1:] or bool(os.environ.get("SMOKE")))

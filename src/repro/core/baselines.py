@@ -21,7 +21,6 @@ import numpy as np
 
 from repro.core.allocator import ECCOAllocator, RECLAllocator, UniformAllocator
 from repro.core.controller import ControllerConfig, ECCOController, WindowMetrics
-from repro.core.gaimd import steady_state_rates
 from repro.core.grouping import Request
 from repro.core.trainer import RetrainJob, SharedEngine
 
@@ -33,6 +32,9 @@ class IndependentController(ECCOController):
     allocator_cls = UniformAllocator
     adaptive_sampling = False     # AMS-style rate adaptation (RECL)
     use_model_zoo = False
+    # no bandwidth coordination: plain AIMD (alpha=1, beta=0.5) equal
+    # competition through the FleetTransmissionPlane's equal-share path
+    bandwidth_mode = "equal"
 
     def __init__(self, engine: SharedEngine, streams, cc=None, *, seed=0):
         super().__init__(engine, streams, cc, seed=seed)

@@ -12,10 +12,11 @@ import numpy as np
 from repro.core.allocator import ECCOAllocator, AllocationTrace
 from repro.core.batching import shared_engine
 from repro.core.drift import FleetDriftDetector, batch_token_histogram
-from repro.core.gaimd import ecco_params, steady_state_rates
 from repro.core.grouping import Grouper, Request
 from repro.core.signature_index import SignatureIndex
 from repro.core.trainer import RetrainJob, SharedEngine
+from repro.core.transmission import (FleetTransmissionPlane, ProfileTable,
+                                     SamplingConfig)
 from repro.data.streams import Stream
 
 
@@ -38,6 +39,13 @@ class ControllerConfig:
     sig_buckets: int = 64            # drift-signature histogram buckets
     shortlist_k: int = 0             # grouping eval_on cap (0 = no cap)
     drift_impl: str = "exact"        # FleetDriftDetector scoring backend
+    # §3.2 profiled sampling-config table. None = a single fixed
+    # (sample_rate, seq_len) configuration (the seed's behavior; the
+    # table's configs must use resolution == seq_len because the ring
+    # pool holds fixed-width rows). Populated tables come from the
+    # Fig. 5 profiling procedure in benchmarks/bench_transmission.py or
+    # a scenario's `profile` spec.
+    profile_table: Optional[ProfileTable] = None
 
 
 @dataclasses.dataclass
@@ -47,9 +55,17 @@ class WindowMetrics:
     groups: Dict[str, List[str]]
     shares: Dict[str, float]
     bandwidth: Dict[str, float]
+    # tokens each grouped member actually ingested after §3.2
+    # compression — always <= bandwidth * window_seconds / bytes_per_token
+    delivered: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class ECCOController:
+    # GAIMD parameterization for step 2: "ecco" = alpha p_j/n_j
+    # (GPU-share proportional); "equal" = plain AIMD equal competition
+    # (the no-coordination baselines override this)
+    bandwidth_mode = "ecco"
+
     def __init__(self, engine: SharedEngine, streams: Sequence[Stream],
                  cc: Optional[ControllerConfig] = None, *, seed: int = 0):
         self.engine = engine
@@ -65,6 +81,25 @@ class ECCOController:
                                index=self.sig_index,
                                shortlist_k=self.cc.shortlist_k)
         self.jobs: List[RetrainJob] = []
+        table = self.cc.profile_table
+        if table is None:
+            # fixed sampling configuration: the window's full sample at
+            # the stream's native resolution (seed semantics)
+            table = ProfileTable([SamplingConfig(self.cc.sample_rate,
+                                                 self.cc.seq_len)])
+        else:
+            # the ring pool stores fixed-width (seq_len,) rows, so a
+            # config at any other resolution would be rejected at
+            # ingest mid-run — fail at construction instead
+            bad = [c for c in getattr(table, "configs", [])
+                   if c.resolution != self.cc.seq_len]
+            if bad:
+                raise ValueError(
+                    f"profile_table configs must use resolution == "
+                    f"seq_len={self.cc.seq_len} (the token ring pool "
+                    f"holds fixed-width rows); offending: {bad}")
+        self.tx_plane = FleetTransmissionPlane(
+            table, bytes_per_token=self.cc.bytes_per_token)
         self.fleet = FleetDriftDetector(
             threshold=self.cc.drift_threshold, buckets=self.cc.sig_buckets,
             vocab=engine.cfg.vocab_size, impl=self.cc.drift_impl)
@@ -86,6 +121,14 @@ class ECCOController:
         this once instead of a per-stream linear scan (O(streams *
         fleet) per window at 10k streams)."""
         return {mem.stream_id: j for j in self.jobs for mem in j.members}
+
+    def _token_budgets(self, fshare: Sequence[float]) -> List[float]:
+        """Per-flow token budget for §3.2 config selection: the group's
+        share of the accelerator tokens one retraining window can
+        consume (the paper's GPU-budget axis of the Fig. 5 table)."""
+        cc = self.cc
+        cap = cc.window_micro * cc.micro_steps * cc.train_batch * cc.seq_len
+        return [s * cap for s in fshare]
 
     def warmup(self):
         """Set drift references from time-0 data."""
@@ -120,6 +163,7 @@ class ECCOController:
             job.purge_stream_data(stream_id)
         self.jobs[:] = [j for j in self.jobs if j.members]
         self.sig_index.remove(stream_id)
+        self.tx_plane.remove_flow(stream_id)
         self.request_time.pop(stream_id, None)
 
     # ------------------------------------------------------------------
@@ -153,35 +197,62 @@ class ECCOController:
                 self.request_time.setdefault(s.stream_id, t)
                 self.grouper.group_request(self.jobs, req)
 
-        # 2. GPU shares estimate -> transmission control (GAIMD)
+        # 2. GPU shares estimate -> transmission control (GAIMD). The
+        # plane warm-starts every flow's GAIMD rate from the state it
+        # persisted at the end of the previous window (cold only on a
+        # flow's first grouped window) and short-circuits the fluid
+        # simulation once the steady cycle is reached.
         shares: Dict[str, float] = {}
         bw: Dict[str, float] = {}
+        delivered: Dict[str, int] = {}
         if self.jobs:
             p = self.allocator.estimate_shares(self.jobs)
-            flows, fshare, fn, caps = [], [], [], []
-            for j in self.jobs:
-                for m in j.members:
-                    flows.append(m.stream_id)
-                    fshare.append(p[j.job_id])
-                    fn.append(j.num_members)
-                    lc = (cc.local_caps or {}).get(m.stream_id, np.inf)
-                    caps.append(lc)
-            rates = steady_state_rates(
-                *ecco_params(fshare, fn), np.asarray(caps, np.float32),
-                cc.shared_bandwidth)
+            members = [m for j in self.jobs for m in j.members]
+            jobs_of = [j for j in self.jobs for _ in j.members]
+            flows = [m.stream_id for m in members]
+            fshare = [p[j.job_id] for j in jobs_of]
+            fn = [j.num_members for j in jobs_of]
+            caps = [(cc.local_caps or {}).get(sid, np.inf)
+                    for sid in flows]
+            rates = self.tx_plane.allocate(flows, fshare, fn, caps,
+                                           cc.shared_bandwidth,
+                                           mode=self.bandwidth_mode)
             bw = dict(zip(flows, map(float, rates)))
             shares = p
-            # 3. members deliver data volume matched to bandwidth
-            for j in self.jobs:
-                for m in j.members:
-                    toks = window_data.get(m.stream_id)
-                    if toks is None:
-                        continue
-                    deliverable = int(bw[m.stream_id] * cc.window_seconds
-                                      / cc.bytes_per_token / cc.seq_len)
-                    n_seq = max(1, min(toks.shape[0] // max(1, j.num_members),
-                                       deliverable))
-                    j.ingest(toks[:n_seq], m.stream_id)
+            # 3. §3.2 camera-side decisions for the whole fleet in ONE
+            # batched call: sampling config from the profiled table at
+            # the group's budget level, f*/n_j scaling, and compression
+            # (sequence subsampling + resolution truncation) to the
+            # achieved bandwidth. A zero-bandwidth camera delivers
+            # NOTHING (the seed's max(1, ...) forced >= 1 sequence).
+            batch = self.tx_plane.decide_many(
+                budget_levels=self.tx_plane.levels_for_shares(fshare),
+                token_budgets=self._token_budgets(fshare),
+                p_shares=fshare, n_members=fn, achieved_bw=rates,
+                window_seconds=cc.window_seconds)
+            for i, (j, m) in enumerate(zip(jobs_of, members)):
+                toks = window_data.get(m.stream_id)
+                if toks is None:
+                    continue
+                res = int(batch.resolution[i])
+                # sequence subsampling: whole sequences within the
+                # delivered-token allowance, bounded by what the stream
+                # sampled this window (configs are seq_len-wide, see
+                # __init__, so no column truncation happens here)
+                n_seq = int(batch.delivered[i]) // res if res else 0
+                if (n_seq == 0 and res and batch.delivered[i] > 0
+                        and int(batch.deliverable[i]) >= res):
+                    # a group larger than the config rate gives each
+                    # member a fractional f*/n_j share; quantize UP to
+                    # one whole sequence when the achieved bandwidth
+                    # can carry it (a zero-bandwidth flow still
+                    # delivers nothing: deliverable < res)
+                    n_seq = 1
+                sl = toks[:n_seq]
+                delivered[m.stream_id] = int(sl.shape[0]) * res
+                if sl.shape[0] == 0:
+                    continue
+                j.ingest(sl, m.stream_id)
 
             # 4. allocator runs the retraining window (Alg. 1)
             self.allocator.run_window(self.jobs, cc.window_micro)
@@ -233,7 +304,8 @@ class ECCOController:
         groups = {j.job_id: [m.stream_id for m in j.members]
                   for j in self.jobs}
         wm = WindowMetrics(t=t, per_stream_acc=acc, groups=groups,
-                           shares=shares, bandwidth=bw)
+                           shares=shares, bandwidth=bw,
+                           delivered=delivered)
         self.history.append(wm)
         self.t += cc.window_seconds
         return wm

@@ -15,9 +15,11 @@ Two granularities:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
+
+from repro.core.rows import RowRegistry
 
 
 def token_histogram(tokens, buckets: int = 64, vocab: Optional[int] = None
@@ -140,9 +142,8 @@ class FleetDriftDetector:
         self.vocab = vocab
         self.impl = impl
         self.band = float(band)
-        self._row: Dict[str, int] = {}
-        self._ids: List[str] = []            # row -> stream id
-        cap = 8
+        self._rows = RowRegistry()           # id -> row churn discipline
+        cap = self._rows.capacity
         self._ref = np.zeros((cap, self.buckets), np.float64)
         self._has_ref = np.zeros(cap, bool)
         self._live = np.zeros((cap, self.buckets), np.float64)
@@ -150,23 +151,23 @@ class FleetDriftDetector:
 
     # -- membership (camera churn) ---------------------------------------
     def __len__(self) -> int:
-        return len(self._ids)
+        return len(self._rows)
 
     def __contains__(self, stream_id: str) -> bool:
-        return stream_id in self._row
+        return stream_id in self._rows
 
     @property
     def stream_ids(self) -> List[str]:
-        return list(self._ids)
+        return self._rows.ids
 
-    def _grow_to(self, need: int):
-        """Amortized doubling: per-stream appends stay O(1) so building
-        a 10k-camera fleet doesn't reallocate the dense arrays 10k
-        times."""
+    def _sync_capacity(self):
+        """Amortized doubling (via the registry): per-stream appends
+        stay O(1) so building a 10k-camera fleet doesn't reallocate the
+        dense arrays 10k times."""
         cap = self._ref.shape[0]
-        if need <= cap:
+        new = self._rows.capacity
+        if new <= cap:
             return
-        new = max(need, 2 * cap)
         pad = new - cap
         self._ref = np.concatenate(
             [self._ref, np.zeros((pad, self.buckets), np.float64)])
@@ -178,35 +179,26 @@ class FleetDriftDetector:
                                        np.zeros(pad, np.float64)])
 
     def add_stream(self, stream_id: str) -> int:
-        row = self._row.get(stream_id)
-        if row is not None:
-            return row
-        self._grow_to(len(self._ids) + 1)
-        row = len(self._ids)
-        self._row[stream_id] = row
-        self._ids.append(stream_id)
-        self._ref[row] = 0.0
-        self._live[row] = 0.0
-        self._has_ref[row] = False
-        self._scores[row] = 0.0
+        row, new = self._rows.add(stream_id)
+        self._sync_capacity()
+        if new:
+            self._ref[row] = 0.0
+            self._live[row] = 0.0
+            self._has_ref[row] = False
+            self._scores[row] = 0.0
         return row
 
     def remove_stream(self, stream_id: str):
         """Swap-with-last removal keeps the live rows dense (capacity
         is retained; rows beyond len(self) are garbage)."""
-        row = self._row.pop(stream_id, None)
-        if row is None:
+        mv = self._rows.remove(stream_id)
+        if mv is None or mv[0] == mv[1]:
             return
-        last = len(self._ids) - 1
-        if row != last:
-            moved = self._ids[last]
-            self._ids[row] = moved
-            self._row[moved] = row
-            self._ref[row] = self._ref[last]
-            self._live[row] = self._live[last]
-            self._has_ref[row] = self._has_ref[last]
-            self._scores[row] = self._scores[last]
-        self._ids.pop()
+        row, last = mv
+        self._ref[row] = self._ref[last]
+        self._live[row] = self._live[last]
+        self._has_ref[row] = self._has_ref[last]
+        self._scores[row] = self._scores[last]
 
     # -- references -------------------------------------------------------
     def set_reference(self, stream_id: str, tokens):
@@ -216,7 +208,8 @@ class FleetDriftDetector:
 
     def set_references(self, stream_ids: Sequence[str], tokens):
         """Batched warmup: tokens is (N, ...) aligned with stream_ids."""
-        self._grow_to(len(self._ids) + len(stream_ids))
+        self._rows.reserve(len(stream_ids))
+        self._sync_capacity()
         hists = batch_token_histogram(tokens, self.buckets, self.vocab)
         for sid, h in zip(stream_ids, hists):
             row = self.add_stream(sid)
@@ -229,14 +222,14 @@ class FleetDriftDetector:
 
     # -- per-stream state accessors ---------------------------------------
     def score(self, stream_id: str) -> float:
-        return float(self._scores[self._row[stream_id]])
+        return float(self._scores[self._rows[stream_id]])
 
     def hist(self, stream_id: str) -> np.ndarray:
         """Latest live window signature (float64, exact)."""
-        return self._live[self._row[stream_id]].copy()
+        return self._live[self._rows[stream_id]].copy()
 
     def reference(self, stream_id: str) -> Optional[np.ndarray]:
-        row = self._row[stream_id]
+        row = self._rows[stream_id]
         return self._ref[row].copy() if self._has_ref[row] else None
 
     # -- the batched window call -------------------------------------------

@@ -57,6 +57,46 @@ def steady_state_rates(alpha, beta, local_cap, shared_cap, *,
     return np.asarray(jnp.mean(rates[-tail:], axis=0))
 
 
+def simulate_warm(alpha, beta, local_cap, shared_cap, *,
+                  r0: Optional[np.ndarray] = None, max_steps: int = 4000,
+                  chunk: int = 500, tol: float = 0.01):
+    """Chunked GAIMD simulation with warm start + convergence short-circuit.
+
+    Runs `simulate` in `chunk`-step slices from `r0` (zeros when None —
+    the cold transient) and stops as soon as two consecutive chunk
+    means agree to within `tol` (relative to the rate magnitude): the
+    AIMD sawtooth has entered its steady cycle and further steps only
+    re-average the same cycle. A warm `r0` carried from the previous
+    retraining window starts inside the cycle, so the fleet stops
+    paying the from-zero transient every window.
+
+    Returns (rates (N,), final_r (N,), steps_run): `rates` is the
+    steady-cycle time average (the `steady_state_rates` analogue),
+    `final_r` the instantaneous state to persist for the next window.
+    """
+    alpha = np.asarray(alpha, np.float32)
+    n = alpha.shape[0]
+    r = (np.zeros(n, np.float32) if r0 is None
+         else np.asarray(r0, np.float32))
+    if n == 0:
+        return np.zeros(0, np.float64), r, 0
+    chunk = max(1, min(int(chunk), int(max_steps)))
+    prev = None
+    mean = np.zeros(n, np.float64)
+    steps_run = 0
+    while steps_run < max_steps:
+        rates, rf = simulate(alpha, beta, local_cap, shared_cap,
+                             steps=chunk, r0=r)
+        r = np.asarray(rf)
+        mean = np.asarray(jnp.mean(rates, axis=0), np.float64)
+        steps_run += chunk
+        if prev is not None and np.abs(mean - prev).max() <= \
+                tol * max(1e-9, float(np.abs(prev).max())):
+            break
+        prev = mean
+    return mean, r, steps_run
+
+
 def ecco_params(p_shares, n_members, *, beta: float = 0.5,
                 alpha_scale: float = 1.0):
     """Per-camera GAIMD parameters from GPU shares (paper: alpha = p_j/n_j,

@@ -1,0 +1,80 @@
+"""Dense row registry: the fleet-plane churn discipline, once.
+
+Every batched plane keys dense per-entity arrays by an id -> row map
+with the same three rules: rows are handed out in insertion order,
+capacity grows by amortized doubling (10k-camera setup must not
+reallocate 10k times), and removal swap-compacts with the last live
+row so arrays stay dense (capacity is retained; rows beyond len() are
+garbage). `FleetDriftDetector` and `FleetTransmissionPlane` both build
+on this registry instead of hand-rolling the discipline; the registry
+tracks ids and capacity, the owner moves its own array rows on the
+(dst, src) swap the registry reports.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+
+class RowRegistry:
+    """id -> dense row index. Owners size their arrays to `capacity`
+    after `add`/`reserve` and apply the row move `remove` returns."""
+
+    def __init__(self, capacity: int = 8):
+        self._row: Dict[str, int] = {}
+        self._ids: List[str] = []
+        self.capacity = max(1, int(capacity))
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def __contains__(self, rid: str) -> bool:
+        return rid in self._row
+
+    def __getitem__(self, rid: str) -> int:
+        """Row of `rid`; KeyError when absent."""
+        return self._row[rid]
+
+    def get(self, rid: str) -> Optional[int]:
+        return self._row.get(rid)
+
+    @property
+    def ids(self) -> List[str]:
+        """row -> id, in row order (a copy)."""
+        return list(self._ids)
+
+    def reserve(self, extra: int) -> int:
+        """Grow capacity to hold `extra` more rows (amortized doubling);
+        returns the new capacity for the owner to size arrays against."""
+        need = len(self._ids) + int(extra)
+        if need > self.capacity:
+            self.capacity = max(need, 2 * self.capacity)
+        return self.capacity
+
+    def add(self, rid: str) -> Tuple[int, bool]:
+        """(row, is_new). New ids append at the dense end; existing ids
+        return their current row. Grows capacity as needed — the owner
+        must re-check its array sizes against `capacity` afterwards."""
+        row = self._row.get(rid)
+        if row is not None:
+            return row, False
+        self.reserve(1)
+        row = len(self._ids)
+        self._row[rid] = row
+        self._ids.append(rid)
+        return row, True
+
+    def remove(self, rid: str) -> Optional[Tuple[int, int]]:
+        """Swap-with-last removal. Returns None when `rid` is absent;
+        otherwise (dst, src): when dst != src the owner must copy array
+        row src into dst (the vacated slot inherits the previous last
+        row — never a stale departed entity's state)."""
+        row = self._row.pop(rid, None)
+        if row is None:
+            return None
+        last = len(self._ids) - 1
+        if row != last:
+            moved = self._ids[last]
+            self._ids[row] = moved
+            self._row[moved] = row
+        self._ids.pop()
+        return row, last

@@ -19,8 +19,9 @@ regression test can name a workload and get the identical fleet back:
                             SAME domain (a city-wide event): maximal
                             cross-camera correlation.
   * bandwidth_contention  — one drift event under a tight shared
-                            bottleneck and heterogeneous per-camera
-                            uplink caps.
+                            bottleneck, heterogeneous per-camera
+                            uplink caps, and a profiled §3.2
+                            sampling-config table (`profile` spec).
 
 A scenario is `make_fleet`-compatible: `.bank`/`.streams` slot in
 anywhere `make_fleet`'s return does, and `shared_bandwidth` /
@@ -58,6 +59,12 @@ class FleetScenario:
     shared_bandwidth: float = 1e9
     local_caps: Optional[Dict[str, float]] = None
     churn: List[ChurnEvent] = dataclasses.field(default_factory=list)
+    # §3.2 profiled sampling-config table as PLAIN DATA (data/ cannot
+    # import core/): {"configs": [[rate, resolution], ...],
+    # "acc": [[budget_level, cfg_idx, acc], ...]}. The scenario runner
+    # materializes it via transmission.ProfileTable.from_spec. None =
+    # the controller's fixed-sampling default.
+    profile: Optional[dict] = None
 
     def events_at(self, window: int) -> List[ChurnEvent]:
         return [e for e in self.churn if e.window == window]
@@ -199,9 +206,19 @@ def bandwidth_contention(*, regions: int = 2, streams_per_region: int = 4,
                                   streams_per_region, rng,
                                   prefix=f"cam{r}", seed=seed + 10 * r)
     caps = {s.stream_id: float(rng.uniform(*cap_range)) for s in streams}
+    # a profiled §3.2 sampling-config table (rates at the streams'
+    # native 32-token resolution — the controller's ring pool holds
+    # fixed-width rows): higher budget levels profile best at higher
+    # sampling rates, with seeded jitter so the argmax isn't degenerate
+    rates = (2, 4, 8)
+    acc = [[lvl, i,
+            round(0.35 + 0.10 * lvl * (i + 1) / len(rates)
+                  + float(rng.uniform(0.0, 0.02)), 6)]
+           for lvl in range(4) for i in range(len(rates))]
+    profile = {"configs": [[r, 32] for r in rates], "acc": acc}
     return FleetScenario("bandwidth_contention", bank, streams, windows,
                          seed, shared_bandwidth=shared_bandwidth,
-                         local_caps=caps)
+                         local_caps=caps, profile=profile)
 
 
 SCENARIOS: Dict[str, Callable[..., FleetScenario]] = {

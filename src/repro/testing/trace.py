@@ -36,6 +36,7 @@ from repro.configs import smoke_config
 from repro.core.baselines import FRAMEWORKS
 from repro.core.controller import ControllerConfig
 from repro.core.trainer import SharedEngine
+from repro.core.transmission import ProfileTable
 from repro.data.scenarios import FleetScenario, build_scenario
 
 
@@ -64,6 +65,8 @@ def run_scenario(framework: str, scenario: FleetScenario, *,
     cc_kw = dict(window_seconds=scenario.window_seconds,
                  shared_bandwidth=scenario.shared_bandwidth,
                  local_caps=scenario.local_caps)
+    if getattr(scenario, "profile", None):
+        cc_kw["profile_table"] = ProfileTable.from_spec(scenario.profile)
     cc_kw.update(cc_overrides)
     cc = ControllerConfig(**cc_kw)
     ctl = FRAMEWORKS[framework](engine, list(scenario.streams), cc,

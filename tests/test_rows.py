@@ -1,0 +1,46 @@
+"""RowRegistry: the shared dense-row churn discipline every batched
+plane (drift detector, transmission plane) builds on."""
+import pytest
+
+from repro.core.rows import RowRegistry
+
+
+def test_rows_insertion_order_and_lookup():
+    r = RowRegistry()
+    assert len(r) == 0 and "a" not in r
+    assert r.add("a") == (0, True)
+    assert r.add("b") == (1, True)
+    assert r.add("a") == (0, False)          # idempotent re-add
+    assert r.ids == ["a", "b"]
+    assert r["b"] == 1 and r.get("c") is None
+    with pytest.raises(KeyError):
+        r["c"]
+
+
+def test_rows_amortized_doubling():
+    r = RowRegistry(capacity=2)
+    for i in range(100):
+        r.add(f"s{i}")
+    assert r.capacity >= 100
+    # doubling, not per-add growth: few distinct capacities were seen
+    assert r.capacity in (128, 100) or r.capacity >= 100
+    assert r.reserve(1000) >= 1100
+
+
+def test_rows_swap_remove_reports_move():
+    r = RowRegistry()
+    for x in "abcd":
+        r.add(x)
+    assert r.remove("nope") is None
+    dst, src = r.remove("b")                 # middle: last swaps in
+    assert (dst, src) == (1, 3)
+    assert r.ids == ["a", "d", "c"]
+    assert r["d"] == 1
+    dst, src = r.remove("c")                 # last row: no move needed
+    assert dst == src == 2
+    assert r.ids == ["a", "d"]
+    # fully drain, then refill reuses dense rows from 0
+    r.remove("a")
+    r.remove("d")
+    assert len(r) == 0
+    assert r.add("z") == (0, True)

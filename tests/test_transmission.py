@@ -23,16 +23,25 @@ def test_profile_table_best_respects_budget():
     best = t.best(0, token_budget=128)
     assert best.tokens <= 128
     # and it is the argmax among fitting configs
-    fitting = [(t._acc[(0, i)], c) for i, c in enumerate(cfgs)
+    fitting = [(t.acc(0, i), c) for i, c in enumerate(cfgs)
                if c.tokens <= 128]
-    assert t._acc[(0, cfgs.index(best))] == max(a for a, _ in fitting)
+    assert t.acc(0, cfgs.index(best)) == max(a for a, _ in fitting)
+    # unprofiled cells read back as None
+    assert t.acc(9, 0) is None
 
 
-def test_profile_table_fallback_densest_fitting():
+def test_profile_table_fallback_sparsest():
+    """An unprofiled budget level must degrade conservatively: the
+    SPARSEST config that fits (the seed returned the densest, maximally
+    violating the budget when nothing fit at all)."""
     t = tx.ProfileTable([tx.SamplingConfig(2, 16), tx.SamplingConfig(4, 32)])
-    # no recordings at level 7 -> densest config that fits
+    # no recordings at level 7 -> sparsest fitting config
     assert t.best(7, token_budget=64).tokens == 32
-    assert t.best(7, token_budget=1000).tokens == 128
+    assert t.best(7, token_budget=1000).tokens == 32
+    # over-budget regression: nothing fits token_budget=8 -> still the
+    # sparsest overall, NOT the densest
+    assert t.best(7, token_budget=8).tokens == 32
+    assert t.best(7).tokens == 32
 
 
 def test_profile_table_empty_configs_no_crash():
@@ -48,7 +57,8 @@ def test_profile_table_empty_configs_no_crash():
                     n_members=2, achieved_bandwidth=8.0,
                     window_seconds=1.0)
     assert d.delivered_tokens == 0 and d.config.tokens == 0
-    # nonempty table where nothing fits still falls back (unchanged)
+    # nonempty table where nothing fits still falls back to a config
+    # (here the only one)
     t = tx.ProfileTable([tx.SamplingConfig(4, 32)])
     assert t.best(0, token_budget=1).tokens == 128
 
@@ -62,6 +72,27 @@ def test_decision_scales_rate_by_members():
     assert d.scaled_rate == pytest.approx(d.config.rate / 3)
     assert d.gaimd_alpha == pytest.approx(0.6 / 3)
     assert d.gaimd_beta == 0.5
+
+
+def test_decision_target_rate_is_proportional_target():
+    """target_rate is the alpha/(1-beta) steady-state GAIMD target the
+    realized bandwidth is graded against — NOT the achieved bandwidth
+    (the seed stored achieved, making proportionality-error reporting
+    compare achieved-vs-achieved, i.e. identically zero)."""
+    from repro.core.gaimd import proportionality_error
+    t, _ = _table()
+    ctrl = tx.TransmissionController(t, bytes_per_token=1.0)
+    decs = [ctrl.decide(gpu_budget_level=1, token_budget=512, p_share=p,
+                        n_members=n, achieved_bandwidth=bw,
+                        window_seconds=1.0)
+            for p, n, bw in ((0.6, 3, 7.0), (0.4, 1, 3.0))]
+    for d, (p, n) in zip(decs, ((0.6, 3), (0.4, 1))):
+        assert d.target_rate == pytest.approx((p / n) / (1 - 0.5))
+        assert d.target_rate != pytest.approx(7.0) or p != 0.6
+    # achieved deviates from target -> nonzero proportionality error
+    err = proportionality_error([7.0, 3.0],
+                                [d.target_rate for d in decs])
+    assert err > 0.0
 
 
 def test_decision_compresses_to_bandwidth():
