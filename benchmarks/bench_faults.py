@@ -1,10 +1,16 @@
 """Fault-tolerance drill: checkpoint save/restore latency + fidelity,
-mid-training failure recovery, and straggler quota renormalization —
-the operational half of "runs on thousands of nodes".
+mid-training failure recovery, elastic window checkpoint/restore cost,
+and straggler quota renormalization — the operational half of "runs on
+thousands of nodes".
+
+Results go to stdout as CSV rows AND to BENCH_faults.json so the
+recovery-cost trajectory is machine-readable across PRs; CI's
+bench-smoke job uploads it.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import tempfile
 import time
@@ -18,7 +24,10 @@ from repro.core.grouping import Request
 from repro.core.trainer import RetrainJob
 from repro.data.streams import DomainBank
 from repro.distributed import checkpoint as ckpt
+from repro.distributed.elastic import FleetElastic
 from repro.distributed.stragglers import StragglerPolicy
+
+OUT_JSON = "BENCH_faults.json"
 
 
 def run():
@@ -61,6 +70,29 @@ def run():
         rows.add("acc_after_recovery", acc_after)
         rows.add("recovery_exact", int(abs(acc_before - acc_after) < 1e-6))
 
+    # elastic window protocol cost: the per-window recovery point
+    # (disk checkpoint of every job's train-state) and the rollback's
+    # restore-through-the-bank path (docs/distributed_plane.md). A
+    # 4-job fleet exercises the {job_id: state} tree shape.
+    jobs = [job] + [RetrainJob(engine,
+                               Request(f"s{i}", 0.0, (0, 0), toks, 0.0,
+                                       train_data=toks),
+                               micro_steps=4, batch=16, seed=i)
+                    for i in range(1, 4)]
+    with tempfile.TemporaryDirectory() as d:
+        el = FleetElastic(d)
+        t0 = time.perf_counter()
+        el.on_window_start(jobs)
+        rows.add("elastic_window_ckpt_ms",
+                 (time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        el.restore_jobs(jobs)
+        rows.add("elastic_restore_jobs_ms",
+                 (time.perf_counter() - t0) * 1e3)
+        acc_el = engine.accuracy(jobs[0].state["params"], ev)
+        rows.add("elastic_restore_exact",
+                 int(abs(acc_before - acc_el) < 1e-6))
+
     # straggler mitigation: wall time per micro-window stays bounded
     pol = StragglerPolicy(threshold=2.0)
     rngs = np.random.default_rng(1)
@@ -77,6 +109,13 @@ def run():
     rows.add("straggler_wall_reduction",
              wall_naive / max(wall_mitigated, 1e-9))
     rows.add("straggler_flagged", int(pol.is_straggler("slow")))
+    metrics = {k: (None if isinstance(v, float) and not np.isfinite(v)
+                   else v)
+               for k, v in rows.metrics.items()}
+    with open(OUT_JSON, "w") as f:
+        json.dump({"metrics": metrics}, f, indent=1, allow_nan=False)
+        f.write("\n")
+    rows.add("json_out", OUT_JSON)
     return rows.emit()
 
 

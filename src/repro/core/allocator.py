@@ -21,7 +21,8 @@ term) — used by benchmarks/bench_allocator.py (paper Fig. 10).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.batching import shared_engine
 
@@ -64,11 +65,40 @@ class ECCOAllocator:
         return {k: v / tot for k, v in pos.items()}
 
     # -- Alg. 1 main loop ----------------------------------------------------
-    def run_window(self, jobs: Sequence, window_micro: int) -> AllocationTrace:
-        """Run one retraining window of `window_micro` micro-windows."""
+    def run_window(self, jobs: Sequence, window_micro: int, *,
+                   stragglers=None, deadline: Optional[float] = None,
+                   clock: Optional[Callable[[], float]] = None,
+                   barrier: Optional[Callable[[], None]] = None
+                   ) -> AllocationTrace:
+        """Run one retraining window of `window_micro` micro-windows.
+
+        `stragglers`: optional distributed.stragglers.StragglerPolicy.
+        When set, every micro-window is wall-clock timed per job and a
+        flagged straggler's next micro-window runs under a shrunken
+        step quota (quota re-normalization) — the allocator then
+        measures a smaller AccGain for it and de-prioritizes it, the
+        paper's own feedback loop doing double duty. Timing needs
+        per-job launches, so the batched initial pass is traded for
+        the (bit-identical) scalar loop while a policy is attached.
+
+        `deadline`: optional wall-clock budget (seconds) for this
+        window, measured by `clock` (default time.monotonic; tests
+        inject a fake). Once exceeded, no further greedy micro-windows
+        are granted — leftover budget is dropped so a straggling fleet
+        can't stretch the window (straggler-aware window deadline).
+
+        `barrier`: optional callable invoked before every micro-window
+        (FleetElastic.barrier) — the elastic runtime's health-check
+        point; it raises DeviceFailure to abort the window.
+
+        All four default to None/off, leaving the window byte-identical
+        to the seed path (golden traces).
+        """
         jobs = list(jobs)
         if not jobs:          # update_grouping may have dropped every job
             return AllocationTrace(order=[], acc={}, shares={}, gpu_time={})
+        clock = clock if clock is not None else time.monotonic
+        t0 = clock()
         budget = window_micro
         acc: Dict[str, float] = {}
         acc_gain: Dict[str, float] = {}
@@ -89,9 +119,26 @@ class ECCOAllocator:
             used[j.job_id] += 1
 
         def micro_retraining(j):
-            a_i = j.eval()
-            j.train_micro()
-            record(j, a_i, j.eval())
+            if barrier is not None:
+                barrier()
+            if stragglers is None:
+                a_i = j.eval()
+                j.train_micro()
+                record(j, a_i, j.eval())
+                return
+            base = j.micro_steps
+            ts = clock()
+            try:
+                # quota re-normalization: a straggler trains fewer
+                # steps this micro-window so its wall time re-joins
+                # the fleet median
+                j.micro_steps = stragglers.quota(j.job_id, base)
+                a_i = j.eval()
+                j.train_micro()
+                record(j, a_i, j.eval())
+            finally:
+                j.micro_steps = base
+            stragglers.record(j.job_id, clock() - ts)
 
         # initial training pass — with a batch-capable engine the whole
         # fleet's measurement collapses to three fleet calls (eval all,
@@ -105,8 +152,11 @@ class ECCOAllocator:
         # the measurement pass itself moves no state across the host
         # boundary.
         head = jobs[:min(budget, len(jobs))]
-        eng = shared_engine(head) if head else None
+        eng = shared_engine(head) if (head and stragglers is None) \
+            else None
         if eng is not None:
+            if barrier is not None:
+                barrier()
             a_i = eng.eval_jobs(head)
             eng.train_micro_many(head)
             a_f = eng.eval_jobs(head)
@@ -119,6 +169,8 @@ class ECCOAllocator:
 
         by_id = {j.job_id: j for j in jobs}
         while budget > 0:
+            if deadline is not None and clock() - t0 >= deadline:
+                break     # window deadline: drop the leftover budget
             jid = max(gains, key=gains.get)
             micro_retraining(by_id[jid])
             gains = self._objective_gains(jobs, acc, acc_gain)
@@ -169,7 +221,8 @@ class UniformAllocator(ECCOAllocator):
     """Naive baseline: round-robin micro-windows, no measurement-driven
     choices."""
 
-    def run_window(self, jobs: Sequence, window_micro: int) -> AllocationTrace:
+    def run_window(self, jobs: Sequence, window_micro: int, *,
+                   barrier=None, **_ignored) -> AllocationTrace:
         jobs = list(jobs)
         if not jobs:
             return AllocationTrace(order=[], acc={}, shares={}, gpu_time={})
@@ -183,6 +236,8 @@ class UniformAllocator(ECCOAllocator):
         eng = shared_engine(jobs)
         done = 0
         while done < window_micro:
+            if barrier is not None:
+                barrier()
             rnd = jobs[:min(len(jobs), window_micro - done)]
             if eng is not None:
                 eng.train_micro_many(rnd)

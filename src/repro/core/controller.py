@@ -4,11 +4,13 @@ window (Fig. 3 / Fig. 4 of the paper).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import trainer as _trainer
 from repro.core.allocator import ECCOAllocator, AllocationTrace
 from repro.core.batching import shared_engine
 from repro.core.drift import FleetDriftDetector, batch_token_histogram
@@ -18,6 +20,7 @@ from repro.core.trainer import RetrainJob, SharedEngine
 from repro.core.transmission import (FleetTransmissionPlane, ProfileTable,
                                      SamplingConfig)
 from repro.data.streams import Stream
+from repro.distributed.elastic import DeviceFailure
 
 
 @dataclasses.dataclass
@@ -46,6 +49,11 @@ class ControllerConfig:
     # Fig. 5 profiling procedure in benchmarks/bench_transmission.py or
     # a scenario's `profile` spec.
     profile_table: Optional[ProfileTable] = None
+    # straggler-aware wall-clock budget (seconds) for one retraining
+    # window's allocator loop: once exceeded, leftover micro-windows
+    # are dropped (distributed.stragglers). None = no deadline (seed
+    # semantics — golden traces depend on every micro-window running).
+    window_deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -67,13 +75,32 @@ class ECCOController:
     bandwidth_mode = "ecco"
 
     def __init__(self, engine: SharedEngine, streams: Sequence[Stream],
-                 cc: Optional[ControllerConfig] = None, *, seed: int = 0):
+                 cc: Optional[ControllerConfig] = None, *, seed: int = 0,
+                 mesh=None, elastic=None, stragglers=None):
+        """`mesh`: optional 1-D fleet device mesh (launch.mesh.
+        make_fleet_mesh) — every decision plane shards its row axis
+        over it (JobBank slots, drift rows, signature columns), with
+        decisions bit-identical to single-device. `elastic`: optional
+        distributed.elastic.FleetElastic — run_window then checkpoints
+        at window start and survives mid-window device loss by
+        re-meshing and re-running the window. `stragglers`: optional
+        distributed.stragglers.StragglerPolicy, wired into the
+        allocator's micro-window loop together with
+        cc.window_deadline."""
         self.engine = engine
         self.streams = list(streams)
         self.cc = cc or ControllerConfig()
+        self.elastic = elastic
+        self.stragglers = stragglers
+        if mesh is None and elastic is not None:
+            mesh = elastic.mesh
+        self.mesh = mesh
+        if elastic is not None:
+            elastic.mesh = mesh
         self.allocator = ECCOAllocator()
         self.sig_index = SignatureIndex(buckets=self.cc.sig_buckets,
-                                        capacity=max(64, 2 * len(streams)))
+                                        capacity=max(64, 2 * len(streams)),
+                                        mesh=mesh)
         self.grouper = Grouper(eps_t=self.cc.eps_t,
                                delta_loc=self.cc.delta_loc,
                                p_drop=self.cc.p_drop,
@@ -99,10 +126,14 @@ class ECCOController:
                     f"seq_len={self.cc.seq_len} (the token ring pool "
                     f"holds fixed-width rows); offending: {bad}")
         self.tx_plane = FleetTransmissionPlane(
-            table, bytes_per_token=self.cc.bytes_per_token)
+            table, bytes_per_token=self.cc.bytes_per_token, mesh=mesh)
         self.fleet = FleetDriftDetector(
             threshold=self.cc.drift_threshold, buckets=self.cc.sig_buckets,
-            vocab=engine.cfg.vocab_size, impl=self.cc.drift_impl)
+            vocab=engine.cfg.vocab_size, impl=self.cc.drift_impl,
+            mesh=mesh)
+        bank = getattr(engine, "bank", None)
+        if mesh is not None and hasattr(bank, "place_on"):
+            bank.place_on(mesh)   # job axis block-sharded over the mesh
         for s in self.streams:
             self.fleet.add_stream(s.stream_id)
         self.rng = np.random.default_rng(seed)
@@ -166,8 +197,100 @@ class ECCOController:
         self.tx_plane.remove_flow(stream_id)
         self.request_time.pop(stream_id, None)
 
-    # ------------------------------------------------------------------
+    # -- elastic window protocol ---------------------------------------
+    def _barrier(self):
+        """Stage-boundary health check; DeviceFailure propagates to the
+        run_window retry loop. No-op without an elastic runtime."""
+        if self.elastic is not None:
+            self.elastic.barrier()
+
+    def _snapshot(self) -> dict:
+        """Host control-plane snapshot at a window boundary: everything
+        a window mutates outside the JobBank device stack (which the
+        elastic runtime checkpoints to disk). Strong refs to the job
+        handles keep their bank slots alive through the rollback."""
+        return {
+            "t": self.t,
+            "rng": copy.deepcopy(self.rng.bit_generator.state),
+            "stream_rng": {s.stream_id:
+                           copy.deepcopy(s.rng.bit_generator.state)
+                           for s in self.streams},
+            "jobs": list(self.jobs),
+            "job_host": {j.job_id: {
+                "members": [copy.copy(m) for m in j.members],
+                "pool": copy.deepcopy(j.pool),
+                "rng": copy.deepcopy(j.rng.bit_generator.state),
+                "gpu_time": j.gpu_time,
+            } for j in self.jobs},
+            "job_counter": _trainer._job_counter.n,
+            "history_len": len(self.history),
+            "request_time": dict(self.request_time),
+            "gains": dict(self.allocator.last_gains),
+            "grouper_events": len(self.grouper.events),
+            "fleet": self.fleet.state_dict(),
+            "sig": self.sig_index.state_dict(),
+            "tx": self.tx_plane.state_dict(),
+        }
+
+    def _restore(self, snap: dict, mesh):
+        """Roll the host control plane back to `snap` and re-attach
+        every plane to (possibly shrunken) `mesh`; job train-states
+        come back from the elastic runtime's window-start checkpoint.
+        Jobs created by the aborted attempt lose their last reference
+        here — their bank slots free via the deferred-free rule and
+        compact away at the next batched entry point."""
+        self.mesh = mesh
+        self.t = snap["t"]
+        self.rng.bit_generator.state = copy.deepcopy(snap["rng"])
+        for s in self.streams:
+            s.rng.bit_generator.state = \
+                copy.deepcopy(snap["stream_rng"][s.stream_id])
+        self.jobs[:] = snap["jobs"]
+        for j in self.jobs:
+            jh = snap["job_host"][j.job_id]
+            j.members = [copy.copy(m) for m in jh["members"]]
+            j.pool = copy.deepcopy(jh["pool"])
+            j.rng.bit_generator.state = copy.deepcopy(jh["rng"])
+            j.gpu_time = jh["gpu_time"]
+        _trainer._job_counter.n = snap["job_counter"]
+        del self.history[snap["history_len"]:]
+        self.request_time = dict(snap["request_time"])
+        self.allocator.last_gains = dict(snap["gains"])
+        del self.grouper.events[snap["grouper_events"]:]
+        self.fleet.set_mesh(mesh)
+        self.fleet.load_state_dict(snap["fleet"])
+        self.sig_index.set_mesh(mesh)
+        self.sig_index.load_state_dict(snap["sig"])
+        self.tx_plane.set_mesh(mesh)
+        self.tx_plane.load_state_dict(snap["tx"])
+        bank = getattr(self.engine, "bank", None)
+        if hasattr(bank, "invalidate_device"):
+            bank.invalidate_device()   # device memory is gone
+            bank.place_on(mesh)
+        if self.elastic is not None:
+            self.elastic.restore_jobs(self.jobs)
+
     def run_window(self) -> WindowMetrics:
+        """One retraining window. With an elastic runtime attached the
+        window is transactional: job states checkpoint to disk and the
+        host control plane snapshots at the boundary, and a mid-window
+        DeviceFailure (raised at a barrier) shrinks the fleet mesh to
+        the survivors, rolls everything back, and re-runs the window —
+        whose decisions are bit-identical to a run that never failed,
+        because every plane's math is row-local under block sharding."""
+        if self.elastic is None:
+            return self._run_window_inner()
+        self.elastic.on_window_start(self.jobs)
+        snap = self._snapshot()
+        while True:
+            try:
+                return self._run_window_inner()
+            except DeviceFailure as e:
+                mesh = self.elastic.recover(e.lost)
+                self._restore(snap, mesh)
+
+    # ------------------------------------------------------------------
+    def _run_window_inner(self) -> WindowMetrics:
         cc = self.cc
         t = self.t
 
@@ -196,6 +319,7 @@ class ECCOController:
                               sig=self.fleet.hist(s.stream_id))
                 self.request_time.setdefault(s.stream_id, t)
                 self.grouper.group_request(self.jobs, req)
+        self._barrier()
 
         # 2. GPU shares estimate -> transmission control (GAIMD). The
         # plane warm-starts every flow's GAIMD rate from the state it
@@ -254,8 +378,16 @@ class ECCOController:
                     continue
                 j.ingest(sl, m.stream_id)
 
-            # 4. allocator runs the retraining window (Alg. 1)
-            self.allocator.run_window(self.jobs, cc.window_micro)
+            # 4. allocator runs the retraining window (Alg. 1), under
+            # the elastic barrier (one health check per micro-window),
+            # the straggler quota policy, and the window deadline —
+            # all no-ops when unset (seed semantics)
+            self.allocator.run_window(
+                self.jobs, cc.window_micro,
+                stragglers=self.stragglers,
+                deadline=cc.window_deadline,
+                barrier=(self.elastic.barrier if self.elastic is not None
+                         else None))
 
             # 5. periodic regrouping (Alg. 2 UpdateGrouping) — evaluated
             # on each member's RECENT window data (the paper's
@@ -277,6 +409,7 @@ class ECCOController:
                     m.sig = sig
                     self.sig_index.refresh_sig(m.stream_id, m.sig)
             self.grouper.update_grouping(self.jobs, t)
+        self._barrier()
 
         # metrics: eval samples stay per-stream draws (each stream owns
         # its rng, drawn in fleet order), scoring is ONE batched fleet

@@ -33,9 +33,10 @@ import numpy as np
 
 class SignatureIndex:
     def __init__(self, buckets: int = 64, capacity: int = 64,
-                 *, impl: str = "auto"):
+                 *, impl: str = "auto", mesh=None):
         self.buckets = buckets
         self.impl = impl           # kernels.ops.pairwise_js backend
+        self.mesh = mesh           # fleet mesh: signatures column-sharded
         cap = max(8, int(capacity))
         self._sig = np.zeros((cap, buckets), np.float32)
         self._has_sig = np.zeros(cap, bool)
@@ -145,6 +146,31 @@ class SignatureIndex:
             self._has_sig[row] = False
             self._job[row] = -1
             self._free.append(row)
+
+    def set_mesh(self, mesh):
+        """(Re)attach the fleet mesh (elastic re-mesh). Dispatch-only:
+        scores are mesh-independent."""
+        self.mesh = mesh
+
+    # -- snapshot / restore (elastic window rollback) -----------------------
+    def state_dict(self) -> dict:
+        return {"sig": self._sig.copy(), "has_sig": self._has_sig.copy(),
+                "t": self._t.copy(), "loc": self._loc.copy(),
+                "job": self._job.copy(), "active": self._active.copy(),
+                "row": dict(self._row), "free": list(self._free),
+                "jobkey": dict(self._jobkey)}
+
+    def load_state_dict(self, state: dict):
+        self._sig = state["sig"].copy()
+        self._has_sig = state["has_sig"].copy()
+        self._t = state["t"].copy()
+        self._loc = state["loc"].copy()
+        self._job = state["job"].copy()
+        self._active = state["active"].copy()
+        self._row = dict(state["row"])
+        self._free = list(state["free"])
+        self._jobkey = dict(state["jobkey"])
+        self._gen += 1              # invalidate the segment cache
 
     def rebuild(self, jobs):
         """Re-derive membership from a jobs list mutated externally."""
@@ -260,7 +286,8 @@ class SignatureIndex:
             # score against the full capacity block: the jitted kernel
             # sees a stable shape across membership churn and only
             # recompiles when the index grows
-            d = np.asarray(ops.pairwise_js(q, self._sig, impl=self.impl))
+            d = np.asarray(ops.pairwise_js(q, self._sig, impl=self.impl,
+                                           mesh=self.mesh, shard="cols"))
             d = d[:, rows_sorted].astype(np.float64)
             d = np.where(mhas[None, :], d, np.inf)
             jobmin = np.minimum.reduceat(d, starts, axis=1)     # (R, jobs)

@@ -49,7 +49,24 @@ from repro.models.model import Model, build_model
 from repro.train.train_step import (init_state, make_train_step,
                                     make_train_step_many)
 
-_job_counter = itertools.count()
+class _JobCounter:
+    """Monotonic job-id source, rewindable to a snapshot. Elastic
+    recovery re-runs an aborted window from its start; jobs created in
+    the aborted attempt must reuse the SAME ids on the re-run (gains,
+    groups, and golden traces key on job_id), so the counter position
+    is part of the controller's window snapshot — `itertools.count`
+    can't rewind."""
+
+    def __init__(self):
+        self.n = 0
+
+    def __next__(self) -> int:
+        v = self.n
+        self.n += 1
+        return v
+
+
+_job_counter = _JobCounter()
 
 
 def _pad_size(n: int, floor: int = 4) -> int:
@@ -276,7 +293,7 @@ class JobBank:
     """
 
     def __init__(self, engine: "SharedEngine", capacity: int = 4,
-                 resident: Optional[bool] = None):
+                 resident: Optional[bool] = None, mesh=None):
         self.engine = engine
         self._cap = int(capacity)
         self.resident = True if resident is None else bool(resident)
@@ -290,6 +307,67 @@ class JobBank:
         self.stats = TransferStats()
         self.state_row_nbytes = 0    # one slot's full train-state
         self.params_row_nbytes = 0   # one slot's params subtree
+        self.mesh = None
+        self._sharding = None        # NamedSharding of the slot axis
+        if mesh is not None:
+            self.place_on(mesh)
+
+    def place_on(self, mesh):
+        """(Re)place the resident stack under a fleet mesh: slots
+        block-sharded along the job axis (distributed.sharding.
+        stack_sharding), capacity aligned to the device count so the
+        blocks stay equal. Also the elastic re-mesh path — device_put
+        against the NEW mesh's sharding moves surviving state without a
+        host round-trip. mesh=None detaches (single-device placement).
+        Values never change: gathers/scatters/updates are exact
+        whatever the placement, so decisions stay bit-identical."""
+        self.mesh = mesh
+        if mesh is None or not self.resident:
+            self._sharding = None
+            return
+        from repro.distributed.sharding import stack_sharding
+        self._sharding = stack_sharding(mesh)
+        self._pad_capacity(self._align(self._cap))
+        self._enforce_sharding()
+
+    def _align(self, n: int) -> int:
+        """Round capacity up to a device-count multiple so the slot
+        axis splits into equal per-device blocks (RowRegistry.align,
+        same rule)."""
+        if self.mesh is None:
+            return n
+        from repro.distributed.sharding import fleet_devices
+        d = fleet_devices(self.mesh)
+        return -(-n // d) * d
+
+    def _enforce_sharding(self):
+        """Re-place any resident leaf whose sharding drifted from the
+        fleet placement (donated update kernels usually preserve it;
+        growth concats and re-meshes don't). Device-to-device, no host
+        crossing."""
+        if self._sharding is None or self._dev is None:
+            return
+        s = self._sharding
+
+        def fix(x):
+            return x if getattr(x, "sharding", None) == s \
+                else jax.device_put(x, s)
+        self._dev = jax.tree.map(fix, self._dev)
+
+    def invalidate_device(self):
+        """Simulate accelerator-memory loss (elastic failure model: the
+        device stack is gone, the host control plane survives). Every
+        device row is marked stale AND zeroed — a live row whose only
+        valid copy was device-side is now genuinely lost, so a recovery
+        path that forgets to restore a job reads zeros instead of
+        silently reusing 'dead' device values. Restore writes each job
+        through `write` (host mirror + dirty mark); the next batched
+        entry point flushes the fleet in one scatter."""
+        self._dev_ok[:] = False
+        if self._dev is not None:
+            self._dev = jax.tree.map(lambda x: jnp.zeros_like(x),
+                                     self._dev)
+            self._enforce_sharding()
 
     def __len__(self) -> int:
         """Live slots, including dead-but-not-yet-compacted ones."""
@@ -313,14 +391,22 @@ class JobBank:
         if self.resident:
             self._dev = jax.tree.map(
                 lambda x: jnp.zeros(x.shape, x.dtype), self._host)
+            self._enforce_sharding()
 
     def _grow_to(self, need: int):
         """Amortized doubling: allocating the Nth job is O(state), not
-        O(N * state)."""
+        O(N * state). Under a mesh, capacity rounds up to a device
+        multiple so the slot axis keeps equal per-device blocks."""
         if need <= self._cap:
             return
-        new_cap = max(need, 2 * self._cap)
+        self._pad_capacity(self._align(max(need, 2 * self._cap)))
+
+    def _pad_capacity(self, new_cap: int):
+        """Pad every stacked array (host mirror, resident stack,
+        validity bitmaps) to exactly `new_cap` slots."""
         pad = new_cap - self._cap
+        if pad <= 0:
+            return
         if self._host is not None:
             self._host = jax.tree.map(
                 lambda x: np.concatenate(
@@ -331,6 +417,7 @@ class JobBank:
                 lambda x: jnp.concatenate(
                     [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]),
                 self._dev)
+            self._enforce_sharding()
         self._host_ok = np.concatenate(
             [self._host_ok, np.zeros(pad, bool)])
         self._dev_ok = np.concatenate(
@@ -427,6 +514,7 @@ class JobBank:
             dst, src = _pad_sel_rows(dst, src)
             self._dev = _dev_rows_move(self._dev, jnp.asarray(dst),
                                        jnp.asarray(src))
+            self._enforce_sharding()
 
     @staticmethod
     def _check_idx(idx):
@@ -456,6 +544,7 @@ class JobBank:
         sel, rows = _pad_sel_rows(dirty.astype(np.int32), rows)
         self._dev = _dev_rows_set(self._dev, jnp.asarray(sel),
                                   jax.tree.map(jnp.asarray, rows))
+        self._enforce_sharding()
         self._dev_ok[dirty] = True
         # bytes = the payload that actually crossed, incl. pad lanes
         self.stats.h2d(int(sel.size) * self.state_row_nbytes)
@@ -540,6 +629,7 @@ class JobBank:
         self._check_idx(idx)
         self._state_leaves(state)          # validates the treedef
         self._dev = _dev_row_set(self._dev, jnp.int32(idx), state)
+        self._enforce_sharding()
         self._dev_ok[idx] = True
         self._host_ok[idx] = False
 
@@ -569,6 +659,7 @@ class JobBank:
             psel, rows = _pad_sel_rows(sel.astype(np.int32), states)
             self._dev = _dev_rows_set(self._dev, jnp.asarray(psel),
                                       jax.tree.map(jnp.asarray, rows))
+            self._enforce_sharding()
             self._dev_ok[sel] = True
             self._host_ok[sel] = False
             return
@@ -611,7 +702,7 @@ class SharedEngine:
     def __init__(self, cfg: ModelConfig, tcfg: Optional[TrainConfig] = None,
                  *, distill_weight: float = 1.0, batched: bool = True,
                  eval_chunk: int = 128, batch_min_jobs: int = 4,
-                 resident: Optional[bool] = None):
+                 resident: Optional[bool] = None, mesh=None):
         self.cfg = cfg
         self.model = build_model(cfg)
         # b2=0.999 + no decay: the small-batch streaming regime needs the
@@ -638,7 +729,7 @@ class SharedEngine:
         # the scalar step (identical numbers, and small fleets skip the
         # vmapped-executable compile entirely)
         self.batch_min_jobs = int(batch_min_jobs)
-        self.bank = JobBank(self, resident=resident)
+        self.bank = JobBank(self, resident=resident, mesh=mesh)
 
         # flattened fleet eval: a job's members ride the EXAMPLE axis of
         # one forward (params read once per job, GEMMs see M*B rows);

@@ -284,15 +284,41 @@ class FleetTransmissionPlane:
 
     def __init__(self, table: Optional[ProfileTable] = None, *,
                  bytes_per_token: float = 2.0, max_steps: int = 4000,
-                 chunk: int = 500, tol: float = 0.01):
+                 chunk: int = 500, tol: float = 0.01, mesh=None):
         self.table = table if table is not None else ProfileTable([])
         self.bytes_per_token = bytes_per_token
         self.max_steps = int(max_steps)
         self.chunk = int(chunk)
         self.tol = float(tol)
+        self.mesh = mesh
         self.last_steps = 0          # GAIMD steps burnt by last allocate
-        self._rows = RowRegistry()
+        align = int(mesh.devices.size) if mesh is not None else 1
+        self._rows = RowRegistry(align=align)
         self._r = np.zeros(self._rows.capacity, np.float32)  # GAIMD rates
+
+    def set_mesh(self, mesh):
+        """(Re)attach the fleet mesh (elastic re-mesh). Decisions are
+        mesh-independent: `decide_many` is elementwise per flow (each
+        device block of registry rows can evaluate its own span and the
+        concatenation equals the global call — see `shard_spans`), and
+        `allocate` deliberately stays GLOBAL: GAIMD's shared-bottleneck
+        coupling sums every flow's rate each step, and a device-sharded
+        reduction could reorder that float sum and break the
+        bit-identity bar."""
+        self.mesh = mesh
+        self._rows.set_align(int(mesh.devices.size) if mesh is not None
+                             else 1)
+        if self._rows.capacity > self._r.shape[0]:
+            pad = self._rows.capacity - self._r.shape[0]
+            self._r = np.concatenate([self._r, np.zeros(pad, np.float32)])
+
+    def shard_spans(self):
+        """Contiguous per-device [lo, hi) row blocks of the flow axis
+        (mesh-aligned capacity). Parity contract: for any inputs,
+        concatenating decide_many over the live parts of these spans
+        equals the global decide_many row-for-row."""
+        n = int(self.mesh.devices.size) if self.mesh is not None else 1
+        return self._rows.shard_spans(n)
 
     # -- flow membership (camera churn) --------------------------------
     def __len__(self) -> int:
@@ -347,7 +373,9 @@ class FleetTransmissionPlane:
             beta = np.full(n, 0.5, np.float32)
         else:
             alpha, beta = gaimd.ecco_params(p_shares, n_members)
-        rows = np.array([self.add_flow(f) for f in flow_ids], np.int64)
+        known = self._rows.rows_of(flow_ids)     # fast path: no churn
+        rows = (np.asarray(known, np.int64) if known is not None else
+                np.array([self.add_flow(f) for f in flow_ids], np.int64))
         rates, final, steps = gaimd.simulate_warm(
             alpha, beta, np.asarray(local_caps, np.float32), shared_cap,
             r0=self._r[rows], max_steps=self.max_steps, chunk=self.chunk,
@@ -355,6 +383,21 @@ class FleetTransmissionPlane:
         self._r[rows] = final
         self.last_steps = steps
         return rates
+
+    # -- snapshot / restore (elastic window rollback) ------------------
+    def state_dict(self) -> dict:
+        live = len(self._rows)
+        return {"ids": self._rows.ids, "r": self._r[:live].copy(),
+                "last_steps": self.last_steps}
+
+    def load_state_dict(self, state: dict):
+        align = self._rows.align
+        self._rows = RowRegistry(align=align)
+        self._r = np.zeros(self._rows.capacity, np.float32)
+        for sid in state["ids"]:
+            self.add_flow(sid)
+        self._r[:len(state["ids"])] = state["r"]
+        self.last_steps = state["last_steps"]
 
     # -- batched §3.2 decisions ----------------------------------------
     def decide_many(self, *, budget_levels: Sequence[int], token_budgets,

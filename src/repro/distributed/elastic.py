@@ -47,16 +47,121 @@ def shrink_mesh(current: MeshSpec, failed_rows: int,
 
 def build_mesh(spec: MeshSpec, *, devices=None):
     """Materialize a mesh over the first prod(shape) (surviving)
-    devices."""
-    from jax.sharding import AxisType
+    devices. Version-compat construction via launch.mesh (jax 0.4.x
+    has no AxisType)."""
+    from repro.launch.mesh import make_mesh
     n = int(np.prod(spec.shape))
     devices = (jax.devices() if devices is None else list(devices))[:n]
     if len(devices) < n:
         raise RuntimeError(f"need {n} devices, have {len(devices)}")
-    dev_array = np.array(devices).reshape(spec.shape)
-    from jax.sharding import Mesh
-    return Mesh(dev_array, spec.axes,
-                axis_types=(AxisType.Auto,) * len(spec.axes))
+    return make_mesh(spec.shape, spec.axes, devices=devices)
+
+
+class DeviceFailure(RuntimeError):
+    """Raised at an elastic barrier when device loss invalidates the
+    in-flight retraining window. Carries how many fleet devices died."""
+
+    def __init__(self, lost: int):
+        self.lost = int(lost)
+        super().__init__(f"lost {lost} fleet device(s) mid-window")
+
+
+class FleetElastic:
+    """Elastic runtime for the fleet decision planes (1-D fleet mesh).
+
+    Failure model: accelerator memory is lost (the JobBank's resident
+    slot stack), the host control plane survives. The window protocol
+    (driven by ECCOController.run_window):
+
+      1. `on_window_start(jobs)` — disk-checkpoint every job's
+         train-state ({job_id: state} tree, atomic rename). This plus
+         the controller's in-memory host snapshot is the recovery
+         point.
+      2. `barrier()` between the window's stages (and before every
+         allocator micro-window). A failure scheduled with
+         `schedule_failure` fires at its barrier and raises
+         DeviceFailure; a real deployment would raise it from the
+         runtime's health check instead.
+      3. on DeviceFailure: `recover(lost)` shrinks the mesh to the
+         surviving device prefix (slice-granular loss, same rule as
+         `shrink_mesh`); the controller re-attaches every plane to the
+         new mesh, rolls its host snapshot back, calls `restore_jobs`,
+         and re-runs the window. Per-row math is device-local under
+         block sharding, so the re-run's decisions are bit-identical
+         to a run that never failed (parity-tested in
+         tests/test_distributed_plane.py).
+    """
+
+    def __init__(self, ckpt_dir: str, mesh=None, *, axis: str = "fleet"):
+        self.ckpt_dir = ckpt_dir
+        self.axis = axis
+        self.mesh = mesh            # current fleet mesh (None = 1 device)
+        self.step = 0               # one checkpoint step per window
+        self.barriers = 0
+        self._fail_at: Optional[Tuple[int, int]] = None
+        self.recoveries: List[RecoveryPlan] = []
+
+    def devices(self) -> list:
+        if self.mesh is None:
+            return list(jax.devices())[:1]
+        return list(np.asarray(self.mesh.devices).reshape(-1))
+
+    def schedule_failure(self, n_devices: int = 1, *,
+                         after_barriers: int = 1):
+        """Arm a simulated failure: the `after_barriers`-th barrier
+        from now raises DeviceFailure(n_devices)."""
+        self._fail_at = (self.barriers + int(after_barriers),
+                         int(n_devices))
+
+    def barrier(self):
+        """Stage-boundary health check inside a window."""
+        self.barriers += 1
+        if self._fail_at is not None and self.barriers >= self._fail_at[0]:
+            lost = self._fail_at[1]
+            self._fail_at = None
+            raise DeviceFailure(lost)
+
+    def on_window_start(self, jobs: Sequence):
+        """Checkpoint every job's train-state at the window boundary.
+        Reading `job.state` syncs through the bank residency cache (one
+        d2h per host-stale row, nothing for host-current rows)."""
+        from repro.distributed import checkpoint as ckpt
+        ckpt.save(self.ckpt_dir, self.step,
+                  {j.job_id: j.state for j in jobs})
+        self.step += 1
+
+    def recover(self, lost: int):
+        """Shrink to the surviving device prefix; returns the new mesh
+        (a 1-device mesh survives as a real mesh — sharded entry points
+        degrade to the single-shard path)."""
+        devs = self.devices()
+        n = len(devs) - int(lost)
+        if n < 1:
+            raise RuntimeError("no surviving fleet devices")
+        old = len(devs)
+        from repro.launch.mesh import make_fleet_mesh
+        self.mesh = make_fleet_mesh(n, axis=self.axis,
+                                    devices=devs[:n])
+        self.recoveries.append(RecoveryPlan(
+            old_mesh_shape=(old,), new_mesh_shape=(n,),
+            restore_step=self.step - 1,
+            global_batch_scale=n / old))
+        return self.mesh
+
+    def restore_jobs(self, jobs: Sequence):
+        """Restore every job's train-state from the window-start
+        checkpoint, writing THROUGH the bank residency cache
+        (`job.state =` stages the host mirror and marks the device row
+        stale; the next batched fleet call flushes them in one
+        scatter). `jobs` must be the window-start job set — the same
+        ids the checkpoint holds."""
+        from repro.distributed import checkpoint as ckpt
+        if not jobs:
+            return
+        template = {j.job_id: j.state_template for j in jobs}
+        tree, _ = ckpt.restore(self.ckpt_dir, self.step - 1, template)
+        for j in jobs:
+            j.state = tree[j.job_id]
 
 
 @dataclasses.dataclass

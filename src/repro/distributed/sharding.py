@@ -107,3 +107,50 @@ def batch_pspec(mesh):
     from jax.sharding import PartitionSpec as P
     axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     return P(axes if len(axes) > 1 else axes[0])
+
+
+# -- fleet decision-plane sharding -----------------------------------------
+# The batched control planes (JobBank stacked pytree, fleet_drift rows,
+# decide_many flows, pairwise_js signatures) all shard ONE leading axis —
+# the job/stream row axis — over a 1-D fleet mesh (launch.mesh.
+# make_fleet_mesh). Per-row math is independent, so block-sharding the
+# leading axis is bit-identical to single-device; capacity alignment
+# (core.rows.RowRegistry.align) keeps the blocks equal so churn never
+# re-pads the global shape.
+
+def fleet_axis(mesh) -> str:
+    """The mesh axis fleet rows shard along (leading axis by
+    convention: 'fleet' for make_fleet_mesh, 'data' for a reused
+    production mesh)."""
+    return tuple(mesh.axis_names)[0]
+
+
+def fleet_devices(mesh) -> int:
+    """Shard count along the fleet axis."""
+    return int(mesh.shape[fleet_axis(mesh)])
+
+
+def row_pspec(mesh):
+    """PartitionSpec sharding a leading row axis (rank-polymorphic:
+    trailing dims replicate)."""
+    from jax.sharding import PartitionSpec as P
+    return P(fleet_axis(mesh))
+
+
+def row_sharding(mesh):
+    """NamedSharding for (rows, ...) dense fleet arrays — drift
+    histograms, signature blocks, per-flow state."""
+    from jax.sharding import NamedSharding
+    return NamedSharding(mesh, row_pspec(mesh))
+
+
+def stack_sharding(mesh):
+    """NamedSharding for the JobBank's stacked (capacity, ...) pytree
+    leaves: jobs block-sharded along the slot axis. One sharding object
+    serves every leaf (PartitionSpec over the leading axis only)."""
+    return row_sharding(mesh)
+
+
+def replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P())

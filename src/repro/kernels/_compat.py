@@ -1,12 +1,33 @@
-"""Pallas API compatibility across jax versions.
+"""Pallas / sharding API compatibility across jax versions.
 
 jax renamed the TPU compiler-params dataclass: 0.4.x exposes
 `pltpu.TPUCompilerParams`, newer releases `pltpu.CompilerParams`.
 Every kernel imports the resolved name from here.
+
+Likewise `shard_map`: 0.4.x ships it under
+`jax.experimental.shard_map` (keyword `check_rep`), newer releases as
+`jax.shard_map` (keyword `check_vma`). `shard_map` below resolves the
+callable and hides the keyword rename; replication checking is
+disabled either way because Pallas calls inside the mapped function
+have no replication rule on older jax.
 """
 from __future__ import annotations
 
+import jax as _jax
 from jax.experimental.pallas import tpu as _pltpu
 
 CompilerParams = getattr(_pltpu, "CompilerParams", None) \
     or getattr(_pltpu, "TPUCompilerParams")
+
+_shard_map = getattr(_jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)

@@ -8,12 +8,24 @@ Every op takes `impl`:
                   meaningful on the CPU backend)
   * "ref"       — the materialize-everything oracle (tests only)
   * "auto"      — pallas on TPU, xla elsewhere
+
+The fleet row-axis ops (`pairwise_js`, `fleet_drift`) additionally take
+`mesh`: a 1-D (or leading-axis) device mesh. With a mesh the row axis
+is padded to a device multiple and the SAME per-shard kernel runs under
+`shard_map`, one contiguous row block per device — every row's math is
+device-local and unchanged, so sharded scores are bit-identical to the
+single-device call (the PR 2–5 bit-identity bar; parity-tested on a
+forced 8-device host mesh).
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as _P
 
 from repro.kernels import ref as _ref
+from repro.kernels._compat import shard_map as _shard_map
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fleet_drift import fleet_drift as _fdrift_pallas
 from repro.kernels.fleet_drift import fleet_drift_xla as _fdrift_xla
@@ -49,23 +61,71 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
     return _ref.attention_ref(q, k, v, causal=causal, window=window)
 
 
-def pairwise_js(p, q, *, eps: float = 1e-12, impl: str = "auto"):
+def _row_shards(mesh) -> int:
+    """Device count of a fleet mesh; 0 when no mesh / nothing to shard."""
+    if mesh is None:
+        return 0
+    n = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    return n if n > 1 else 0
+
+
+def _pad_rows(x, n_pad):
+    """Pad the leading (row) axis with zero rows (padding rows are
+    sliced off after the sharded call — their values never matter)."""
+    if n_pad == 0:
+        return x
+    x = jnp.asarray(x)
+    return jnp.concatenate(
+        [x, jnp.zeros((n_pad,) + x.shape[1:], x.dtype)], axis=0)
+
+
+def pairwise_js(p, q, *, eps: float = 1e-12, impl: str = "auto",
+                mesh=None, shard: str = "rows"):
     """(N, M) Jensen-Shannon divergence matrix. p: (N, B); q: (M, B).
 
     The drift-signature similarity engine for fleet-scale grouping:
     one call scores every request histogram against every candidate
     stream signature (core.signature_index.SignatureIndex).
+
+    With `mesh`, one side is block-sharded across devices and the other
+    replicated — shard="rows" splits p (each device computes an
+    (N/D, M) stripe), shard="cols" splits q (an (N, M/D) stripe; what
+    the signature index uses, since its fleet axis is q). Each stripe
+    runs the same kernel on device-local rows, so the assembled matrix
+    is bit-identical to single-device.
     """
     impl = _resolve(impl)
     if impl == "ref":
         return _ref.pairwise_js_ref(p, q, eps=eps)
-    if impl in ("pallas", "interpret"):
-        return _pjs_pallas(p, q, eps=eps, interpret=(impl == "interpret"))
-    return _pjs_xla(p, q, eps=eps)
+
+    def _local(pp, qq):
+        if impl in ("pallas", "interpret"):
+            return _pjs_pallas(pp, qq, eps=eps,
+                               interpret=(impl == "interpret"))
+        return _pjs_xla(pp, qq, eps=eps)
+
+    shards = _row_shards(mesh)
+    if shards:
+        ax = mesh.axis_names[0]
+        if shard == "cols":
+            m = np.shape(q)[0]
+            pad = (-m) % shards
+            f = _shard_map(_local, mesh=mesh,
+                           in_specs=(_P(), _P(ax)),
+                           out_specs=_P(None, ax))
+            out = f(jnp.asarray(p), _pad_rows(q, pad))
+            return out[:, :m]
+        n = np.shape(p)[0]
+        pad = (-n) % shards
+        f = _shard_map(_local, mesh=mesh,
+                       in_specs=(_P(ax), _P()), out_specs=_P(ax))
+        out = f(_pad_rows(p, pad), jnp.asarray(q))
+        return out[:n]
+    return _local(p, q)
 
 
 def fleet_drift(tokens, ref, *, buckets: int, vocab: int = 0,
-                eps: float = 1e-12, impl: str = "auto"):
+                eps: float = 1e-12, impl: str = "auto", mesh=None):
     """Fused fleet drift scoring. tokens: (N, T) int; ref: (N, buckets).
 
     One call histograms every stream's live window and scores it with
@@ -73,15 +133,33 @@ def fleet_drift(tokens, ref, *, buckets: int, vocab: int = 0,
     batched replacement for the controller's per-stream
     token_histogram + js_divergence loop (core.drift.FleetDriftDetector).
     Returns (scores (N,) fp32, live hists (N, buckets) fp32).
+
+    With `mesh`, the stream rows are block-sharded: each device scores
+    its own contiguous row block with the same kernel (histogram + JS
+    are row-local, no collectives), bit-identical to single-device.
     """
     impl = _resolve(impl)
     if impl == "ref":
         return _ref.fleet_drift_ref(tokens, ref, buckets=buckets,
                                     vocab=vocab, eps=eps)
-    if impl in ("pallas", "interpret"):
-        return _fdrift_pallas(tokens, ref, buckets=buckets, vocab=vocab,
-                              eps=eps, interpret=(impl == "interpret"))
-    return _fdrift_xla(tokens, ref, buckets=buckets, vocab=vocab, eps=eps)
+
+    def _local(tok, r):
+        if impl in ("pallas", "interpret"):
+            return _fdrift_pallas(tok, r, buckets=buckets, vocab=vocab,
+                                  eps=eps, interpret=(impl == "interpret"))
+        return _fdrift_xla(tok, r, buckets=buckets, vocab=vocab, eps=eps)
+
+    shards = _row_shards(mesh)
+    if shards:
+        n = np.shape(tokens)[0]
+        pad = (-n) % shards
+        ax = mesh.axis_names[0]
+        f = _shard_map(_local, mesh=mesh,
+                       in_specs=(_P(ax), _P(ax)),
+                       out_specs=(_P(ax), _P(ax)))
+        scores, hists = f(_pad_rows(tokens, pad), _pad_rows(ref, pad))
+        return scores[:n], hists[:n]
+    return _local(tokens, ref)
 
 
 def mlstm(q, k, v, igate, fgate, *, chunk: int = 128, impl: str = "auto"):

@@ -4,23 +4,58 @@ A function, not a module-level constant, so importing this module never
 touches jax device state. The dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
 import; real deployments get devices from the TPU runtime.
+
+Version compatibility (mirrors kernels/_compat.py): jax 0.4.x has no
+`jax.sharding.AxisType`, and early 0.4.x has no `jax.make_mesh` either.
+`make_mesh` degrades through the newest API it finds — axis_types when
+available, bare `jax.make_mesh`, finally a hand-built
+`jax.sharding.Mesh` over `jax.devices()` — instead of raising
+AttributeError, so the fleet planes and the elastic re-mesh path run on
+every jax the container ships.
 """
 from __future__ import annotations
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def _mesh_compat(shape, axes, devices=None):
     import jax
-    from jax.sharding import AxisType
+    import numpy as np
 
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto",
+                        None)
+    mk = getattr(jax, "make_mesh", None)
+    if devices is None and mk is not None:
+        if axis_type is not None:
+            try:
+                return mk(shape, axes, axis_types=(axis_type,) * len(axes))
+            except TypeError:       # make_mesh predates axis_types kwarg
+                pass
+        return mk(shape, axes)
+    n = int(np.prod(shape))
+    devices = (jax.devices() if devices is None else list(devices))[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(np.array(devices).reshape(shape), axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh_compat(shape, axes)
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, *, devices=None):
     """Arbitrary mesh (tests, elastic re-meshing)."""
+    return _mesh_compat(shape, axes, devices)
+
+
+def make_fleet_mesh(n_devices=None, *, axis: str = "fleet", devices=None):
+    """1-D mesh over the fleet row/job axis — what the batched decision
+    planes (JobBank stack, fleet_drift, decide_many, pairwise_js) shard
+    along. Defaults to every visible device; `n_devices` takes a
+    prefix (elastic shrink uses this with the survivor list)."""
     import jax
-    from jax.sharding import AxisType
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    devices = list(jax.devices() if devices is None else devices)
+    n = len(devices) if n_devices is None else int(n_devices)
+    return _mesh_compat((n,), (axis,), devices[:n])

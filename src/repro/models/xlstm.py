@@ -360,9 +360,10 @@ def apply_mlstm_block_seqpar(cfg: ModelConfig, p, x, mesh, *,
     if want_state:
         out_specs = (x_spec, {"C": PS(bspec), "n": PS(bspec),
                               "m": PS(bspec), "conv": PS(bspec)})
-    fn = jax.shard_map(local_block, mesh=mesh,
-                       in_specs=(x_spec, p_specs),
-                       out_specs=out_specs, check_vma=False)
+    from repro.kernels._compat import shard_map
+    fn = shard_map(local_block, mesh=mesh,
+                   in_specs=(x_spec, p_specs),
+                   out_specs=out_specs)
     return fn(x, p)
 
 

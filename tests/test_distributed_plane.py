@@ -1,0 +1,378 @@
+"""Sharded fleet decision-plane parity suite.
+
+Contract (docs/distributed_plane.md): with the row/job axis of every
+decision plane block-sharded over a fleet mesh, all decisions are
+bit-identical to the single-device run; a mid-window device loss
+recovers from the window-start checkpoint and re-runs the window to
+the SAME decisions. Multi-device tests run in subprocesses with 8
+forced host devices (in-process tests must keep seeing 1 device —
+tests/conftest.py deliberately sets no XLA_FLAGS).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.allocator import ECCOAllocator
+from repro.core.rows import RowRegistry
+from repro.core.transmission import (FleetTransmissionPlane, ProfileTable,
+                                     SamplingConfig)
+from repro.distributed.elastic import DeviceFailure, FleetElastic
+from repro.distributed.stragglers import StragglerPolicy
+
+
+def _run_sub(script, **env_extra):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"),
+               **env_extra)
+    return subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+
+
+# -- sharded kernels + drift plane (one 8-device subprocess) ---------------
+
+KERNEL_PARITY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    assert jax.device_count() == 8
+    from repro.kernels import ops
+    from repro.core.drift import FleetDriftDetector
+    from repro.launch.mesh import make_fleet_mesh
+
+    mesh = make_fleet_mesh(8)
+    rng = np.random.default_rng(0)
+
+    # kernels: row counts deliberately NOT multiples of 8 (padding path)
+    for n in (37, 11):
+        toks = rng.integers(0, 64, (n, 32))
+        ref = rng.random((n, 16)); ref /= ref.sum(1, keepdims=True)
+        for impl in ("xla", "interpret"):
+            s0, h0 = ops.fleet_drift(toks, ref, buckets=16, vocab=64,
+                                     impl=impl)
+            s1, h1 = ops.fleet_drift(toks, ref, buckets=16, vocab=64,
+                                     impl=impl, mesh=mesh)
+            np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+            np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+    p = rng.random((23, 16)); p /= p.sum(1, keepdims=True)
+    q = rng.random((37, 16)); q /= q.sum(1, keepdims=True)
+    for impl in ("xla", "interpret"):
+        d0 = np.asarray(ops.pairwise_js(p, q, impl=impl))
+        for shard in ("rows", "cols"):
+            d1 = np.asarray(ops.pairwise_js(p, q, impl=impl, mesh=mesh,
+                                            shard=shard))
+            np.testing.assert_array_equal(d0, d1)
+
+    # drift plane end-to-end, including churn (remove + re-add streams)
+    def drive(det):
+        out = []
+        ids = [f"s{i}" for i in range(13)]
+        for s in ids:
+            det.add_stream(s)
+        refs = rng0 = np.random.default_rng(1)
+        toks = rng0.integers(0, 64, (13, 8, 32))
+        det.set_references(ids, toks)
+        for rnd in range(4):
+            if rnd == 2:
+                for s in ("s3", "s7"):
+                    det.remove_stream(s)
+                    ids.remove(s)
+                for s in ("s13", "s14"):
+                    det.add_stream(s); ids.append(s)
+                det.set_references(["s13", "s14"],
+                                   rng0.integers(0, 64, (2, 8, 32)))
+            obs = rng0.integers(0, 64, (len(ids), 8, 32))
+            trig = det.observe(ids, obs)
+            out.append((list(trig),
+                        [float(det.score(s)) for s in ids]))
+        return out
+
+    a = drive(FleetDriftDetector(threshold=0.1, buckets=16, vocab=64,
+                                 impl="exact"))
+    b = drive(FleetDriftDetector(threshold=0.1, buckets=16, vocab=64,
+                                 impl="exact", mesh=mesh))
+    assert a == b, (a, b)
+    print("KERNEL_PARITY_OK")
+""")
+
+
+def test_sharded_kernels_and_drift_plane_parity():
+    r = _run_sub(KERNEL_PARITY)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "KERNEL_PARITY_OK" in r.stdout
+
+
+# -- sharded JobBank: batched train/eval + churn (8-device subprocess) -----
+
+BANK_PARITY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import numpy as np, jax
+    assert jax.device_count() == 8
+    from repro.configs import smoke_config
+    from repro.core.grouping import Request
+    from repro.core.trainer import RetrainJob, SharedEngine
+    from repro.launch.mesh import make_fleet_mesh
+
+    VOCAB = 64
+
+    def req(sid, toks):
+        return Request(stream_id=sid, t=0.0, loc=(0.0, 0.0),
+                       subsamples=toks, acc=0.0, train_data=toks)
+
+    def drive(mesh):
+        cfg = dataclasses.replace(smoke_config("olmo-1b"),
+                                  vocab_size=VOCAB)
+        eng = SharedEngine(cfg, batch_min_jobs=2, mesh=mesh)
+        rng = np.random.default_rng(0)
+        jobs = [RetrainJob(eng, req(f"s{i}",
+                                    rng.integers(0, VOCAB, (8, 32))),
+                           micro_steps=2, batch=4, seed=i)
+                for i in range(6)]
+        eng.train_micro_many(jobs)
+        # churn: one job dies mid-fleet (swap-compaction), one joins
+        jobs[2].release(); del jobs[2]
+        jobs.append(RetrainJob(eng, req("s9",
+                                        rng.integers(0, VOCAB, (8, 32))),
+                               micro_steps=2, batch=4, seed=9))
+        eng.train_micro_many(jobs)
+        accs = eng.eval_jobs(jobs)
+        states = [jax.tree.map(np.asarray, j.state) for j in jobs]
+        return accs, states
+
+    a_accs, a_states = drive(None)
+    b_accs, b_states = drive(make_fleet_mesh(8))
+    assert a_accs == b_accs, (a_accs, b_accs)
+    for sa, sb in zip(a_states, b_states):
+        for la, lb in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+            np.testing.assert_array_equal(la, lb)
+    print("BANK_PARITY_OK")
+""")
+
+
+def test_sharded_bank_train_eval_churn_parity():
+    r = _run_sub(BANK_PARITY)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "BANK_PARITY_OK" in r.stdout
+
+
+# -- elastic mid-window recovery (8-device subprocess) ---------------------
+
+ELASTIC_RECOVERY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import numpy as np, jax
+    assert jax.device_count() == 8
+    from repro.configs import smoke_config
+    from repro.core import trainer as T
+    from repro.core.controller import ControllerConfig, ECCOController
+    from repro.core.trainer import SharedEngine
+    from repro.data.streams import make_fleet
+    from repro.distributed.elastic import FleetElastic
+    from repro.launch.mesh import make_fleet_mesh
+
+    VOCAB = 64
+
+    def build(mesh=None, elastic=None):
+        T._job_counter.n = 0      # job ids must match across runs
+        cfg = dataclasses.replace(smoke_config("olmo-1b"),
+                                  vocab_size=VOCAB)
+        engine = SharedEngine(cfg)
+        bank, streams = make_fleet(vocab=VOCAB, regions=2,
+                                   streams_per_region=2, dim=4,
+                                   switch_times=(5.0,), seed=1)
+        cc = ControllerConfig(window_micro=6, micro_steps=4,
+                              train_batch=16, drift_threshold=0.25,
+                              p_drop=0.5, shared_bandwidth=1e9)
+        return ECCOController(engine, streams, cc, seed=0, mesh=mesh,
+                              elastic=elastic)
+
+    # reference: 8-device mesh, no failure
+    ctl_a = build(mesh=make_fleet_mesh(8))
+    ctl_a.run(3)
+
+    # elastic: 4 of 8 fleet devices die inside window 2's allocator loop
+    ckpt_dir = os.environ["CKPT_DIR"]
+    el = FleetElastic(ckpt_dir, mesh=make_fleet_mesh(8))
+    ctl_b = build(mesh=el.mesh, elastic=el)
+    ctl_b.warmup()
+    ctl_b.run_window()
+    el.schedule_failure(4, after_barriers=4)
+    ctl_b.run_window()            # aborts, re-meshes to 4, re-runs
+    ctl_b.run_window()
+    assert len(el.recoveries) == 1, el.recoveries
+    plan = el.recoveries[0]
+    assert (plan.old_mesh_shape, plan.new_mesh_shape) == ((8,), (4,))
+    assert int(np.asarray(ctl_b.mesh.devices).size) == 4
+
+    assert len(ctl_a.history) == len(ctl_b.history)
+    for wa, wb in zip(ctl_a.history, ctl_b.history):
+        assert wa.t == wb.t
+        assert wa.groups == wb.groups, (wa.groups, wb.groups)
+        assert set(wa.per_stream_acc) == set(wb.per_stream_acc)
+        for k in wa.per_stream_acc:
+            va, vb = wa.per_stream_acc[k], wb.per_stream_acc[k]
+            assert (va == vb) or (np.isnan(va) and np.isnan(vb)), \\
+                (k, va, vb)
+        assert wa.shares == wb.shares
+        assert wa.bandwidth == wb.bandwidth
+        assert wa.delivered == wb.delivered
+    print("ELASTIC_RECOVERY_OK")
+""")
+
+
+def test_elastic_mid_window_recovery_bit_identical(tmp_path):
+    r = _run_sub(ELASTIC_RECOVERY, CKPT_DIR=str(tmp_path))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "ELASTIC_RECOVERY_OK" in r.stdout
+
+
+# -- decide_many shard-span parity (pure elementwise; in-process) ----------
+
+def test_decide_many_shard_span_parity():
+    """Concatenating decide_many over the registry's per-device row
+    spans equals the global call row-for-row — the contract that makes
+    the transmission plane's decisions shard-local."""
+    table = ProfileTable([SamplingConfig(8, 32), SamplingConfig(4, 32),
+                          SamplingConfig(2, 32)])
+    plane = FleetTransmissionPlane(table, bytes_per_token=1.0)
+    rng = np.random.default_rng(0)
+    n = 24
+    reg = RowRegistry(align=4)
+    reg.reserve(n)
+    kw = dict(budget_levels=[0] * n,
+              token_budgets=rng.uniform(32, 2048, n),
+              p_shares=rng.uniform(0, 1, n),
+              n_members=rng.integers(1, 5, n),
+              achieved_bw=rng.uniform(0, 64, n),
+              window_seconds=10.0)
+    full = plane.decide_many(**kw)
+    spans = reg.shard_spans(4)
+    assert [hi - lo for lo, hi in spans] == [reg.capacity // 4] * 4
+    for field in ("rate", "resolution", "scaled_rate", "deliverable",
+                  "delivered"):
+        parts = []
+        for lo, hi in spans:
+            lo, hi = min(lo, n), min(hi, n)
+            if lo == hi:
+                continue
+            sub = plane.decide_many(**{
+                k: (v if np.isscalar(v) else np.asarray(v)[lo:hi])
+                for k, v in kw.items()})
+            parts.append(getattr(sub, field))
+        np.testing.assert_array_equal(np.concatenate(parts),
+                                      getattr(full, field))
+
+
+# -- straggler quota + window deadline (in-process, fake clock) ------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class _FakeJob:
+    """Allocator duck-type whose train_micro advances a fake clock by
+    micro_steps * step_time and logs the quota it actually ran."""
+
+    def __init__(self, jid, clock, step_time, gain):
+        self.job_id = jid
+        self.num_members = 1
+        self.micro_steps = 4
+        self._clock = clock
+        self._step_time = step_time
+        self._gain = gain
+        self._acc = 0.0
+        self.steps_run = []
+
+    def eval(self):
+        return self._acc
+
+    def train_micro(self):
+        self._clock.t += self.micro_steps * self._step_time
+        self.steps_run.append(self.micro_steps)
+        self._acc = min(1.0, self._acc + self._gain * self.micro_steps)
+
+
+def test_straggler_quota_shrinks_micro_windows():
+    clock = _Clock()
+    fast1 = _FakeJob("fast1", clock, step_time=1.0, gain=0.001)
+    fast2 = _FakeJob("fast2", clock, step_time=1.0, gain=0.001)
+    # slow job: 10x the step time, juiciest gain (so the greedy loop
+    # keeps picking it — the quota must be what reins it in)
+    slow = _FakeJob("slow", clock, step_time=10.0, gain=0.05)
+    pol = StragglerPolicy(threshold=2.0, min_quota_frac=0.25)
+    ECCOAllocator().run_window([fast1, fast2, slow], 8,
+                               stragglers=pol, clock=clock)
+    assert pol.is_straggler("slow")
+    assert not pol.is_straggler("fast1")
+    # first micro-window ran at full quota (no timings yet); every
+    # later one at the re-normalized quota: 4 * max(0.25, med/mean)
+    assert slow.steps_run[0] == 4
+    assert len(slow.steps_run) > 1
+    assert all(s == 1 for s in slow.steps_run[1:]), slow.steps_run
+    assert pol.flagged.get("slow", 0) >= 1
+    assert fast1.steps_run == [4] * len(fast1.steps_run)
+
+
+def test_window_deadline_drops_leftover_budget():
+    clock = _Clock()
+    jobs = [_FakeJob(f"j{i}", clock, step_time=10.0, gain=0.01)
+            for i in range(3)]
+    pol = StragglerPolicy()
+    # initial pass alone burns 3 * 40s; the 100s deadline leaves no
+    # room for greedy micro-windows after it
+    trace = ECCOAllocator().run_window(jobs, 10, stragglers=pol,
+                                       deadline=100.0, clock=clock)
+    assert len(trace.order) == 3, trace.order
+    # without a deadline the full budget runs
+    clock2 = _Clock()
+    jobs2 = [_FakeJob(f"j{i}", clock2, step_time=10.0, gain=0.01)
+             for i in range(3)]
+    trace2 = ECCOAllocator().run_window(jobs2, 10,
+                                        stragglers=StragglerPolicy(),
+                                        clock=clock2)
+    assert len(trace2.order) == 10
+
+
+def test_straggler_off_is_seed_identical():
+    """stragglers=None must leave the scalar path untouched — same
+    order, same accuracies as the seed signature."""
+    clock = _Clock()
+    jobs = [_FakeJob(f"j{i}", clock, step_time=1.0, gain=0.01 * (i + 1))
+            for i in range(3)]
+    a = ECCOAllocator().run_window(jobs, 6)
+    clock2 = _Clock()
+    jobs2 = [_FakeJob(f"j{i}", clock2, step_time=1.0, gain=0.01 * (i + 1))
+             for i in range(3)]
+    b = ECCOAllocator().run_window(jobs2, 6, stragglers=None,
+                                   deadline=None, clock=clock2)
+    assert a.order == b.order
+    assert a.acc == b.acc
+    assert a.gpu_time == b.gpu_time
+
+
+# -- elastic barrier plumbing (in-process) ---------------------------------
+
+def test_barrier_failure_aborts_allocator_window(tmp_path):
+    el = FleetElastic(str(tmp_path))
+    el.schedule_failure(1, after_barriers=3)
+    clock = _Clock()
+    jobs = [_FakeJob(f"j{i}", clock, step_time=1.0, gain=0.01)
+            for i in range(2)]
+    with pytest.raises(DeviceFailure) as ei:
+        ECCOAllocator().run_window(jobs, 8, stragglers=StragglerPolicy(),
+                                   clock=clock, barrier=el.barrier)
+    assert ei.value.lost == 1
+    # the two pre-failure micro-windows ran; the third aborted cleanly
+    assert sum(len(j.steps_run) for j in jobs) == 2
