@@ -1,0 +1,221 @@
+"""Serving-plane benchmark: batched fleet inference under concurrent
+retraining.
+
+Three sections:
+  (a) fleet serving, 1k streams — the full `ECCOController` window
+      loop with `ControllerConfig.serve` on: every window retrains the
+      live groups (step 4) and THEN serves one query per grouped
+      stream through the slot-pool plane (step 6), so reported tick
+      latencies include contention with training dispatch in the same
+      process. Reported: aggregate qps, pooled p50/p99 tick latency —
+      both over ALL ticks and steady-state (excluding the first tick
+      of each padded lane-count shape, which pays the XLA compile) —
+      plus the swap-gate counters (seeded / accepted / rejected).
+  (b) fleet serving, 10k streams — the serve-plane loop with REAL
+      `RetrainJob`s retraining in the same window loop (ingest fresh
+      window tokens -> `train_micro` micro-windows -> snapshot ->
+      gated `publish` -> 10k queries pumped through the slot pool).
+      The full controller is bypassed at this size on purpose: Alg. 2
+      regrouping of 10k simultaneously-drifted streams dominates wall
+      time by orders of magnitude and is benchmarked separately
+      (bench_scalability.py); here the serving plane and the training
+      dispatch it contends with are the measured system. Same metric
+      keys as (a).
+  (c) swap gate — a mini fleet run at `gate_margin=0.0` (ties accept:
+      swaps land every window) and at an impossible margin (every
+      post-seed candidate misses: the incumbent keeps serving and
+      staleness grows), so BOTH gate outcomes are visible in the
+      bench counters, mirroring tests/test_serve_plane.py.
+
+`--smoke` (or SMOKE=1) shrinks the fleet sizes for CI: the point there
+is that the serving path executes end to end, not the numbers.
+
+Results go to stdout as CSV rows AND to BENCH_serving.json (next to
+BENCH_scalability.json) so serving perf is machine-readable across
+PRs; CI's bench-smoke job uploads both.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows, make_engine
+from repro.core.controller import ControllerConfig, ECCOController
+from repro.data.streams import make_fleet
+from repro.serve.plane import FleetServePlane, ServeConfig
+
+WINDOWS = 4              # switch at t=10: windows 2-4 retrain AND serve
+OUT_JSON = "BENCH_serving.json"
+
+
+def _controller(engine, n_streams, scfg, *, seed=0):
+    _, streams = make_fleet(regions=2, streams_per_region=n_streams // 2,
+                            switch_times=(10.0,), seed=seed)
+    cc = ControllerConfig(window_micro=4, micro_steps=2, train_batch=8,
+                          sample_rate=4, eval_batch=16, p_drop=0.5,
+                          shared_bandwidth=1e9, serve=scfg)
+    return ECCOController(engine, streams, cc, seed=seed)
+
+
+def _tick_stats(tick_log):
+    """Pooled latency percentiles from the plane's run-lifetime tick
+    log. Steady-state drops the FIRST tick of each padded lane-count
+    shape (that tick pays the XLA compile for the shape bucket; the
+    {2^k, 3*2^(k-2)} pad grid keeps those buckets to ~2 per octave)."""
+    all_ms = np.asarray([s for _, s in tick_log], np.float64) * 1e3
+    seen, steady = set(), []
+    for pad, s in tick_log:
+        if pad in seen:
+            steady.append(s * 1e3)
+        else:
+            seen.add(pad)
+    steady_ms = np.asarray(steady, np.float64)
+
+    def pcts(a):
+        if a.size == 0:
+            return 0.0, 0.0
+        return (float(np.percentile(a, 50)), float(np.percentile(a, 99)))
+
+    p50, p99 = pcts(all_ms)
+    s50, s99 = pcts(steady_ms)
+    return {"ticks": len(tick_log), "compile_ticks": len(seen),
+            "p50_tick_ms": p50, "p99_tick_ms": p99,
+            "p50_tick_ms_steady": s50, "p99_tick_ms_steady": s99}
+
+
+def _scale_config(n):
+    return ServeConfig(num_slots=min(256, max(8, n // 4)),
+                       capacity=32, max_new=4, prompt_len=8)
+
+
+def _emit_scale_rows(rows: Rows, tag, sp, scfg, queries, serve_s, wall,
+                     windows):
+    rows.add(f"{tag}_queries", queries)
+    rows.add(f"{tag}_qps", queries / serve_s if serve_s else 0.0)
+    for k, v in _tick_stats(sp.tick_log).items():
+        rows.add(f"{tag}_{k}", v)
+    rows.add(f"{tag}_slots", scfg.num_slots)
+    rows.add(f"{tag}_swap_seeded", sp.swap_seeded)
+    rows.add(f"{tag}_swap_accepted", sp.swap_accepted)
+    rows.add(f"{tag}_swap_rejected", sp.swap_rejected)
+    rows.add(f"{tag}_serve_seconds", serve_s)
+    rows.add(f"{tag}_window_wall_seconds", wall / windows)
+    assert queries > 0, "serving plane never admitted a query"
+
+
+def _serve_full_controller(rows: Rows, engine, sizes, windows):
+    for n in sizes:
+        scfg = _scale_config(n)
+        ctl = _controller(engine, n, scfg)
+        t0 = time.time()
+        for w in range(windows):
+            tw = time.time()
+            ctl.run_window()
+            print(f"# n{n} window {w}: {time.time() - tw:.1f}s",
+                  file=sys.stderr, flush=True)
+        wall = time.time() - t0
+        queries = sum(wm.serve["queries"] for wm in ctl.history)
+        serve_s = sum(wm.serve["serve_seconds"] for wm in ctl.history)
+        _emit_scale_rows(rows, f"n{n}", ctl.serve_plane, scfg, queries,
+                         serve_s, wall, windows)
+
+
+def _serve_under_retraining(rows: Rows, engine, n, windows, *,
+                            groups=16, vocab=64, seq=32):
+    """Section (b): retraining and serving contend in one loop, the
+    grouping plane out of the picture. `groups` RetrainJobs (real
+    JobBank slots) each own n/groups streams; every window each job
+    ingests fresh window tokens and runs its micro-windows, then its
+    snapshot rides the validation gate and every stream issues one
+    query against its group's SERVING row."""
+    from repro.core.grouping import Request
+    from repro.core.trainer import RetrainJob
+
+    rng = np.random.default_rng(0)
+    scfg = _scale_config(n)
+    plane = FleetServePlane(engine, scfg)
+    jobs = []
+    for g in range(groups):
+        tok = rng.integers(0, vocab, size=(8, seq))
+        jobs.append(RetrainJob(
+            engine, Request(stream_id=f"s{g}_0", t=0.0, loc=(0.0, 0.0),
+                            subsamples=tok, acc=0.0, train_data=tok),
+            micro_steps=2, batch=8, seed=g))
+    queries = serve_s = 0
+    t0 = time.time()
+    for w in range(windows):
+        tw = time.time()
+        evals = {}
+        for j in jobs:                      # retraining, same loop
+            j.ingest(rng.integers(0, vocab, size=(8, seq)))
+            for _ in range(2):
+                j.train_micro()
+            evals[j.job_id] = rng.integers(0, vocab, size=(4, seq))
+            plane.publish(j.job_id, j.serving_snapshot(),
+                          evals[j.job_id])
+        for s in range(n):                  # one query per stream
+            j = jobs[s % groups]
+            prompt = rng.integers(0, vocab, size=scfg.prompt_len)
+            plane.enqueue(f"s{s}/w{w}", j.job_id, prompt)
+        plane.pump()
+        plane.drain()
+        rep = plane.window_report()
+        queries += rep["queries"]
+        serve_s += rep["serve_seconds"]
+        print(f"# n{n} (retrain-loop) window {w}: "
+              f"{time.time() - tw:.1f}s queries={rep['queries']} "
+              f"ticks={rep['ticks']}", file=sys.stderr, flush=True)
+    _emit_scale_rows(rows, f"n{n}", plane, scfg, queries, serve_s,
+                     time.time() - t0, windows)
+    for j in jobs:
+        j.release()
+
+
+def _gate_outcomes(rows: Rows, engine, n, windows):
+    """Both gate outcomes, visible in counters: margin 0.0 lets every
+    retrained candidate land (ties accept), an impossible margin
+    rejects every post-seed candidate so staleness accumulates."""
+    for tag, margin in (("open", 0.0), ("closed", 1.1)):
+        scfg = ServeConfig(num_slots=8, capacity=32, max_new=4,
+                           prompt_len=8, gate_margin=margin)
+        ctl = _controller(engine, n, scfg)
+        ctl.run(windows)
+        sp = ctl.serve_plane
+        rows.add(f"gate_{tag}_seeded", sp.swap_seeded)
+        rows.add(f"gate_{tag}_accepted", sp.swap_accepted)
+        rows.add(f"gate_{tag}_rejected", sp.swap_rejected)
+        rows.add(f"gate_{tag}_max_staleness",
+                 max(sp.staleness.values(), default=0))
+    assert rows.metrics["gate_closed_rejected"] > 0
+    assert rows.metrics["gate_closed_accepted"] == 0
+
+
+def run(smoke: bool = False):
+    rows = Rows("serving")
+    engine = make_engine()
+    if smoke:
+        _serve_full_controller(rows, engine, sizes=(8,), windows=3)
+        _serve_under_retraining(rows, engine, n=16, windows=2, groups=2)
+        _gate_outcomes(rows, engine, n=4, windows=3)
+    else:
+        _serve_full_controller(rows, engine, sizes=(1000,),
+                               windows=WINDOWS)
+        _serve_under_retraining(rows, engine, n=10000, windows=WINDOWS)
+        _gate_outcomes(rows, engine, n=8, windows=WINDOWS)
+    metrics = {k: (None if isinstance(v, float) and not np.isfinite(v)
+                   else v)
+               for k, v in rows.metrics.items()}
+    with open(OUT_JSON, "w") as f:
+        json.dump({"smoke": smoke, "metrics": metrics}, f, indent=1,
+                  allow_nan=False)
+        f.write("\n")
+    rows.add("json_out", OUT_JSON)
+    return rows.emit()
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv[1:] or bool(os.environ.get("SMOKE")))

@@ -21,6 +21,7 @@ from repro.core.transmission import (FleetTransmissionPlane, ProfileTable,
                                      SamplingConfig)
 from repro.data.streams import Stream
 from repro.distributed.elastic import DeviceFailure
+from repro.serve.plane import FleetServePlane, ServeConfig
 
 
 @dataclasses.dataclass
@@ -54,6 +55,16 @@ class ControllerConfig:
     # are dropped (distributed.stragglers). None = no deadline (seed
     # semantics — golden traces depend on every micro-window running).
     window_deadline: Optional[float] = None
+    # live serving plane (docs/serving_plane.md). None = off (the
+    # default; golden traces never see it). When set, run_window step 6
+    # publishes each group's freshly retrained params through the
+    # EdgeSync-style validation gate and serves every grouped stream's
+    # queries from the committed serving snapshots. Serving is
+    # READ-ONLY w.r.t. the decision planes: it reuses the window's
+    # already-drawn data (queries from window_data, the gate's held-out
+    # set from the metrics eval draws), so enabling it changes no
+    # retraining/grouping/transmission decision and consumes no rng.
+    serve: Optional[ServeConfig] = None
 
 
 @dataclasses.dataclass
@@ -66,6 +77,10 @@ class WindowMetrics:
     # tokens each grouped member actually ingested after §3.2
     # compression — always <= bandwidth * window_seconds / bytes_per_token
     delivered: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # serving-plane window report (FleetServePlane.window_report):
+    # qps / tick latency / swap-gate counters / per-group staleness.
+    # None whenever ControllerConfig.serve is off.
+    serve: Optional[Dict] = None
 
 
 class ECCOController:
@@ -134,6 +149,8 @@ class ECCOController:
         bank = getattr(engine, "bank", None)
         if mesh is not None and hasattr(bank, "place_on"):
             bank.place_on(mesh)   # job axis block-sharded over the mesh
+        self.serve_plane = (FleetServePlane(engine, self.cc.serve)
+                            if self.cc.serve is not None else None)
         for s in self.streams:
             self.fleet.add_stream(s.stream_id)
         self.rng = np.random.default_rng(seed)
@@ -434,14 +451,66 @@ class ECCOController:
         got = dict(zip(grouped, vals))
         for s in self.streams:
             acc[s.stream_id] = got.get(s.stream_id, float("nan"))
+
+        # 6. live serving plane (off by default): validated hot swap of
+        # each group's serving snapshot, then answer this window's
+        # stream queries from the committed snapshots while the
+        # retraining above already ran in the same window loop. Uses
+        # only data drawn above (window_data prompts, evs gate sets) —
+        # zero rng consumption, decisions untouched.
+        serve_report = None
+        if self.serve_plane is not None:
+            serve_report = self._serve_window(window_data, evs)
+
         groups = {j.job_id: [m.stream_id for m in j.members]
                   for j in self.jobs}
         wm = WindowMetrics(t=t, per_stream_acc=acc, groups=groups,
                            shares=shares, bandwidth=bw,
-                           delivered=delivered)
+                           delivered=delivered, serve=serve_report)
         self.history.append(wm)
         self.t += cc.window_seconds
         return wm
+
+    def _serve_window(self, window_data: Dict[str, np.ndarray],
+                      evs: Dict[str, np.ndarray]) -> Dict:
+        """One serving pass (run_window step 6).
+
+        Swap protocol: every live group's freshly retrained params are
+        offered through the plane's validation gate against the
+        group's held-out set — up to `gate_members` members' metrics
+        eval draws (drawn at t+0.5, never ingested for training).
+        Candidate rows follow the bank residency discipline
+        (`RetrainJob.serving_snapshot`: compact, sync, committed row
+        copy). Dead groups are pruned, then each grouped stream issues
+        `queries_per_stream` prompts sliced from the window data it
+        already transmitted, and the plane pumps the slot pool dry.
+        """
+        sp = self.serve_plane
+        scfg = self.cc.serve
+        for j in self.jobs:
+            ms = [m for m in j.members if m.stream_id in evs]
+            ms = ms[:max(1, scfg.gate_members)]
+            if not ms:
+                continue
+            sample = np.concatenate(
+                [evs[m.stream_id] for m in ms])[:self.cc.eval_batch]
+            sp.publish(j.job_id, j.serving_snapshot(), sample)
+        sp.prune({j.job_id for j in self.jobs})
+        by_stream = self._jobs_by_stream()
+        w = len(self.history)
+        for s in self.streams:
+            j = by_stream.get(s.stream_id)
+            if j is None or j.job_id not in sp.store:
+                continue
+            toks = window_data.get(s.stream_id)
+            if toks is None or toks.shape[0] == 0:
+                continue
+            for q in range(scfg.queries_per_stream):
+                prompt = toks[q % toks.shape[0]][:scfg.prompt_len]
+                sp.enqueue(f"{s.stream_id}/w{w}q{q}", j.job_id, prompt)
+        sp.pump()
+        sp.drain()      # transcripts are per-window; keep memory bounded
+        return sp.window_report()
 
     def run(self, windows: int) -> List[WindowMetrics]:
         self.warmup()

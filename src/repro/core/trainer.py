@@ -668,6 +668,22 @@ class JobBank:
             dst[sel] = np.asarray(src)
         self.stats.d2h(int(sel.size) * self.state_row_nbytes)
 
+    def snapshot_params(self, idx: int):
+        """COMMITTED, independent device copy of slot `idx`'s params
+        subtree — unlike `params_stack()` (borrowed) this survives
+        later bank writes/compaction, so long-lived consumers (the
+        serve plane's swap gate holds a group's serving snapshot across
+        windows) may keep it. Resident mode gathers on device (zero
+        host crossing); host mode pays the one params-row h2d its
+        layout implies."""
+        self._check_idx(idx)
+        if self.resident:
+            self.sync_to_device()
+            return jax.tree.map(lambda x: x[idx], self._dev["params"])
+        self.stats.h2d(self.params_row_nbytes)
+        return jax.tree.map(lambda x: jnp.asarray(x[idx]),
+                            self._host["params"])
+
     def params_stack(self):
         """The stacked params subtree (leaves (capacity, ...)) —
         `batched_accuracy`'s params_stack argument. Resident mode
@@ -1011,6 +1027,17 @@ class RetrainJob:
         """Return the bank slot (idempotent). Runs automatically when
         the handle is garbage-collected."""
         self._finalizer()
+
+    def serving_snapshot(self):
+        """Committed device copy of the job's CURRENT params, safe to
+        hold across future bank writes/compaction — what the serve
+        plane's validation gate scores and, on acceptance, installs as
+        the group's serving row. Follows the residency discipline:
+        compact FIRST (a queued-dead slot must not shift this row
+        after the index is captured), then read the synced row."""
+        bank = self.engine.bank
+        bank.compact()
+        return bank.snapshot_params(self._slot.idx)
 
     # -- grouping interface ---------------------------------------------------
     @property

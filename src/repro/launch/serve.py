@@ -4,7 +4,14 @@ group model using the slot-pool KV cache.
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b \
         --requests 6 --prompt-len 24 --max-new 16
 
-Serves the smoke-scale config on CPU; on TPU the same ServeLoop runs the
+`--fleet` serves the same requests through the fleet serving plane
+instead: two group models published through the EdgeSync-style swap
+gate, queries decoded in shared vmapped ticks (one launch per tick for
+any group mix), and a window report with qps / tick percentiles / gate
+counters — the path `ControllerConfig.serve` drives inside
+`ECCOController.run_window` (docs/serving_plane.md).
+
+Serves the smoke-scale config on CPU; on TPU the same loop runs the
 full config under the production mesh (decode shapes proven by
 repro.launch.dryrun).
 """
@@ -16,6 +23,65 @@ import time
 import numpy as np
 
 
+def _run_single(args, cfg, model, params, pending):
+    from repro.serve.kvcache import ServeLoop
+
+    loop = ServeLoop(model, params, num_slots=args.num_slots,
+                     capacity=args.capacity, max_new=args.max_new)
+    t0 = time.time()
+    ticks = 0
+    done = {}
+    while pending or loop.mgr.active():
+        # admit as many as fit
+        while pending and loop.mgr.free_slots():
+            rid, prompt = pending.pop(0)
+            loop.submit(rid, prompt)
+            print(f"admitted {rid} (util={loop.mgr.utilization():.2f})")
+        loop.tick()
+        done.update(loop.drain())
+        ticks += 1
+        if ticks > 10000:
+            raise RuntimeError("serve loop did not drain")
+    done.update(loop.drain())
+    return done, ticks, time.time() - t0
+
+
+def _run_fleet(args, cfg, engine, pending):
+    """Two-group fleet serving with the validated hot swap."""
+    import jax
+    from repro.serve.plane import FleetServePlane, ServeConfig
+
+    plane = FleetServePlane(engine, ServeConfig(
+        num_slots=args.num_slots, capacity=args.capacity,
+        max_new=args.max_new, prompt_len=args.prompt_len))
+    rng = np.random.default_rng(args.seed)
+    sample = rng.integers(0, cfg.vocab_size, size=(4, 16))
+    for g, seed in (("groupA", 0), ("groupB", 1)):
+        d = plane.publish(g, engine.model.init(jax.random.PRNGKey(seed)),
+                          sample)
+        print(f"seeded {g}: acc={d.candidate_acc:.3f}")
+    # a second publish rides the gate: accepted only if the candidate
+    # holds up on the held-out sample (ties accept at margin 0.0)
+    d = plane.publish("groupA",
+                      engine.model.init(jax.random.PRNGKey(2)), sample)
+    print(f"swap groupA: cand={d.candidate_acc:.3f} "
+          f"inc={d.incumbent_acc:.3f} -> "
+          f"{'accepted' if d.accepted else 'rejected'}")
+
+    t0 = time.time()
+    for i, (rid, prompt) in enumerate(pending):
+        plane.enqueue(rid, ("groupA", "groupB")[i % 2], prompt)
+    ticks = plane.pump()
+    done = plane.drain()
+    rep = plane.window_report()
+    print(f"gate: seeded={rep['swap_seeded']} "
+          f"accepted={rep['swap_accepted']} "
+          f"rejected={rep['swap_rejected']}")
+    print(f"qps={rep['qps']:.1f} p50_tick={rep['p50_tick_ms']:.1f}ms "
+          f"p99_tick={rep['p99_tick_ms']:.1f}ms")
+    return done, ticks, time.time() - t0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="olmo-1b")
@@ -25,48 +91,42 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve through the fleet plane (two group "
+                         "models, swap gate, shared vmapped ticks)")
     args = ap.parse_args(argv)
 
     import dataclasses
     import jax
     from repro.configs import smoke_config
     from repro.models.model import build_model
-    from repro.serve.kvcache import ServeLoop
 
     cfg = smoke_config(args.arch)
     if not cfg.has_decode:
         raise SystemExit(f"{args.arch} is encoder-only: no decode step "
                          "(see DESIGN.md §Arch-applicability)")
     cfg = dataclasses.replace(cfg, vocab_size=min(cfg.vocab_size, 256))
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    loop = ServeLoop(model, params, num_slots=args.num_slots,
-                     capacity=args.capacity, max_new=args.max_new)
 
     rng = np.random.default_rng(args.seed)
     pending = [(f"req{i}", rng.integers(0, cfg.vocab_size,
                                         size=args.prompt_len))
                for i in range(args.requests)]
 
-    t0 = time.time()
-    ticks = 0
-    while pending or loop.mgr.active():
-        # admit as many as fit
-        while pending and loop.mgr.free_slots():
-            rid, prompt = pending.pop(0)
-            loop.submit(rid, prompt)
-            print(f"admitted {rid} (util={loop.mgr.utilization():.2f})")
-        loop.tick()
-        ticks += 1
-        if ticks > 10000:
-            raise RuntimeError("serve loop did not drain")
-    dt = time.time() - t0
-    total_tokens = sum(len(v) for v in loop.outputs.values())
-    print(f"served {len(loop.outputs)} requests, {total_tokens} tokens "
+    if args.fleet:
+        from repro.core.trainer import SharedEngine
+        engine = SharedEngine(cfg)
+        done, ticks, dt = _run_fleet(args, cfg, engine, pending)
+    else:
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(args.seed))
+        done, ticks, dt = _run_single(args, cfg, model, params, pending)
+
+    total_tokens = sum(len(v) for v in done.values())
+    print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s) over {ticks} ticks")
-    for rid in sorted(loop.outputs):
-        print(f"  {rid}: {loop.outputs[rid][:8]}...")
-    return loop.outputs
+    for rid in sorted(done):
+        print(f"  {rid}: {done[rid][:8]}...")
+    return done
 
 
 if __name__ == "__main__":

@@ -10,6 +10,15 @@ TPU adaptation note: GPU paged-attention's per-block indirection tables
 defeat the MXU's appetite for dense tiles; on TPU the idiomatic design is
 fixed-capacity per-slot caches (static shapes, no gather in the hot
 loop) with host-side slot recycling — which is what this implements.
+
+Slot lifecycle (shared by `ServeLoop` and the fleet plane in
+`repro.serve.plane`): admit -> prefill (the prefill's argmax IS the
+first emitted token, so EOS/max_new are checked at submit time, not
+first at the next tick) -> decode ticks -> retire. Retirement releases
+the cache slot AND clears the per-slot pending-token entry; finished
+outputs accumulate until `drain()` hands them to the caller — under
+continuous serving the caller MUST drain, or completed transcripts
+pile up unboundedly.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ class SlotState:
     request_id: Optional[str] = None
     pos: int = 0                 # absolute position (incl. meta offset)
     done: bool = True
+    group: Optional[str] = None  # serving-group tag (fleet plane)
 
 
 class CacheManager:
@@ -42,21 +52,44 @@ class CacheManager:
                  dtype=jnp.bfloat16):
         self.model = model
         self.num_slots = num_slots
+        self.user_capacity = capacity            # prompt+generation budget
         self.capacity = capacity + model.cfg.meta_tokens
         self.cache = model.init_cache(num_slots, self.capacity, dtype)
         self.slots: List[SlotState] = [SlotState() for _ in
                                        range(num_slots)]
 
     # -- admission ----------------------------------------------------------
+    def check_fit(self, prompt_len: int, max_new: int):
+        """A request's LAST decode step writes cache position
+        prompt_len + meta_tokens + max_new - 2 (prefill consumes
+        prompt_len + meta positions and already emits token #1), so the
+        whole request fits iff prompt_len + max_new - 1 <=
+        user_capacity. The seed prefilled unconditionally: an oversized
+        prompt silently overflowed the slot (jnp clamps out-of-range
+        dynamic_update_slice indices, corrupting the newest cache rows
+        instead of raising) — fail admission loudly instead."""
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1; got {max_new}")
+        if prompt_len + max_new - 1 > self.user_capacity:
+            raise ValueError(
+                f"request does not fit its slot: prompt_len={prompt_len} "
+                f"+ max_new={max_new} - 1 > capacity={self.user_capacity} "
+                f"(largest admissible prompt is "
+                f"{self.user_capacity - max_new + 1} tokens)")
+
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.done]
 
-    def admit(self, request_id: str) -> int:
+    def admit(self, request_id: str, *, prompt_len: Optional[int] = None,
+              max_new: int = 1, group: Optional[str] = None) -> int:
+        if prompt_len is not None:
+            self.check_fit(prompt_len, max_new)
         free = self.free_slots()
         if not free:
             raise RuntimeError("cache pool exhausted")
         i = free[0]
-        self.slots[i] = SlotState(request_id=request_id, pos=0, done=False)
+        self.slots[i] = SlotState(request_id=request_id, pos=0, done=False,
+                                  group=group)
         return i
 
     def release(self, slot: int):
@@ -65,12 +98,23 @@ class CacheManager:
     def write_prefill(self, slot: int, slot_cache, pos: int):
         """Merge a single-request prefill cache (leading dim 1) into the
         pool at `slot`."""
-        def put(pool, one):
-            return pool.at[:, slot].set(one[:, 0].astype(pool.dtype))
+        self.write_prefill_many([slot], slot_cache, pos)
+
+    def write_prefill_many(self, slots: List[int], batch_cache, pos: int):
+        """Merge a batched prefill cache (leading dim >= len(slots);
+        extra lanes are shape-grid padding and are dropped) into the
+        pool at `slots` — one scatter per leaf for the whole admission
+        wave instead of one per request."""
+        n = len(slots)
+        sel = jnp.asarray(slots)
+
+        def put(pool, many):
+            return pool.at[:, sel].set(many[:, :n].astype(pool.dtype))
         # cache trees are {"segments": [ {k,v,...}, ... ]} with per-leaf
         # layout (layers, batch, ...)
-        self.cache = jax.tree.map(put, self.cache, slot_cache)
-        self.slots[slot].pos = int(pos)
+        self.cache = jax.tree.map(put, self.cache, batch_cache)
+        for i in slots:
+            self.slots[i].pos = int(pos)
 
     def active(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if not s.done]
@@ -94,6 +138,7 @@ class ServeLoop:
         self.max_new = max_new
         self.outputs: Dict[str, List[int]] = {}
         self._new_tokens: Dict[int, int] = {}
+        self._finished: List[str] = []
 
         from repro.serve.serve_step import make_decode_step, \
             make_prefill_step
@@ -101,15 +146,71 @@ class ServeLoop:
                                                   self.mgr.capacity))
         self._decode = jax.jit(make_decode_step(model))
 
+    # -- slot lifecycle ------------------------------------------------------
+    def _retire(self, slot: int):
+        """Release the cache slot AND the per-slot decode state. The
+        seed's release left `_new_tokens[slot]` holding the dead
+        request's last token — a recycled slot driven by raw
+        `mgr.admit` (no fresh prefill write) would replay it into the
+        next request's decode."""
+        st = self.mgr.slots[slot]
+        if st.request_id is not None:
+            self._finished.append(st.request_id)
+        self._new_tokens.pop(slot, None)
+        self.mgr.release(slot)
+
+    def _record_first(self, request_id: str, slot: int, first: int) -> bool:
+        """Record the prefill's argmax as emitted token #1 and apply the
+        retirement rule to it. The seed skipped this check: a request
+        with max_new == 1 (or EOS on the prefill token) stayed active,
+        burned a decode tick, and over-emitted a token past its limit
+        before tick() retired it. Returns True when the request already
+        finished at submit time."""
+        self.outputs[request_id] = [first]
+        if (self.eos_id is not None and first == self.eos_id) \
+                or self.max_new <= 1:
+            self._retire(slot)
+            return True
+        self._new_tokens[slot] = first
+        return False
+
+    def _emit(self, slot: int, token: int) -> str:
+        """One decoded token for `slot`: advance the position, record
+        the token, retire at EOS/limit."""
+        st = self.mgr.slots[slot]
+        st.pos += 1
+        rid = st.request_id
+        self.outputs[rid].append(token)
+        if (self.eos_id is not None and token == self.eos_id) or \
+                len(self.outputs[rid]) >= self.max_new:
+            self._retire(slot)
+        else:
+            self._new_tokens[slot] = token
+        return rid
+
+    def drain(self) -> Dict[str, List[int]]:
+        """Hand over (and forget) every finished request's output.
+        Under continuous serving this is the retirement API that keeps
+        `outputs` bounded: the seed grew it without bound."""
+        done = {}
+        for rid in self._finished:
+            if rid in self.outputs:
+                done[rid] = self.outputs.pop(rid)
+        self._finished.clear()
+        return done
+
+    # -- request path --------------------------------------------------------
     def submit(self, request_id: str, prompt: np.ndarray) -> int:
-        """prompt: (S,) ints. Prefills into a fresh slot."""
-        slot = self.mgr.admit(request_id)
+        """prompt: (S,) ints. Prefills into a fresh slot; the slot is
+        already retired on return when the prefill token finishes the
+        request (max_new == 1 / EOS on token #1)."""
+        prompt = np.asarray(prompt)
+        slot = self.mgr.admit(request_id, prompt_len=prompt.shape[-1],
+                              max_new=self.max_new)
         tok, cache, pos = self._prefill(self.params,
                                         jnp.asarray(prompt)[None])
         self.mgr.write_prefill(slot, cache, int(pos))
-        first = int(np.asarray(tok)[0])
-        self.outputs[request_id] = [first]
-        self._new_tokens[slot] = first
+        self._record_first(request_id, slot, int(np.asarray(tok)[0]))
         return slot
 
     def tick(self) -> Dict[str, int]:
@@ -138,16 +239,8 @@ class ServeLoop:
             self.mgr.cache = jax.tree.map(put, self.mgr.cache, new_sub)
             nxt = np.asarray(nxt)[:, 0]
             for j, i in enumerate(slots):
-                st = self.mgr.slots[i]
-                st.pos = pos + 1
-                t = int(nxt[j])
-                self._new_tokens[i] = t
-                rid = st.request_id
-                self.outputs[rid].append(t)
-                emitted[rid] = t
-                if (self.eos_id is not None and t == self.eos_id) or \
-                        len(self.outputs[rid]) >= self.max_new:
-                    self.mgr.release(i)
+                rid = self._emit(i, int(nxt[j]))
+                emitted[rid] = int(nxt[j])
         return emitted
 
     def run_until_drained(self, max_ticks: int = 256):

@@ -1,0 +1,384 @@
+"""Live serving plane: batched fleet inference from validated per-group
+serving snapshots — the fourth plane (docs/serving_plane.md).
+
+While `ECCOController.run_window` retrains group models, this plane
+answers stream queries from a SEPARATE set of committed per-group
+params — the *serving snapshots* — stacked in one device pytree
+(`ServingStore`, `RowRegistry` churn discipline like every other fleet
+plane). Queries for any mix of groups decode together: every tick is
+ONE vmapped launch over all active slots, each lane selecting its own
+params row and decoding at its own position
+(`serve_step.make_fleet_decode_step`), with admission batching prefills
+per (group, prompt-length) bucket.
+
+A freshly retrained model is NOT what serves next window by default:
+EdgeSync (PAPERS.md) shows naive hot swaps of continuously retrained
+edge models can regress live accuracy, so `publish` runs an
+update-validation gate — the candidate must beat the incumbent on the
+group's held-out eval sample (by `gate_margin`; ties accept at the
+default margin 0.0, since an equal-accuracy fresher snapshot costs
+nothing and resets staleness). On failure the incumbent keeps serving,
+the miss is counted, and the group's staleness (windows since the
+serving snapshot last changed) grows — making accuracy-vs-staleness
+measurable when swaps lag retraining.
+
+Candidate params come from the training plane under the JobBank
+residency discipline: `RetrainJob.serving_snapshot()` compacts the bank
+and returns a committed, independent device copy of the params row
+(`params_stack()` itself is borrowed and must never be held across a
+bank write — see docs/training_plane.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rows import RowRegistry
+from repro.serve.kvcache import ServeLoop
+from repro.serve.serve_step import make_fleet_decode_step
+
+
+def _pad_size(n: int, floor: int = 1) -> int:
+    """Smallest size >= n from the {2^k, 3*2^(k-2)} shape grid — the
+    training plane's padding rule (core.trainer._pad_size), repeated
+    here so the serve plane does not import the training stack: the
+    vmapped decode compiles for ~2 lane counts per octave instead of
+    one per admission pattern."""
+    if n <= floor:
+        return floor
+    k = (n - 1).bit_length()
+    half = 3 << (k - 2) if k >= 2 else 1 << k
+    return half if half >= n else 1 << k
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Controller-side switch for the serving plane
+    (`ControllerConfig.serve`; None = plane off, the default — golden
+    traces never see it)."""
+    num_slots: int = 32          # shared KV-cache slot pool size
+    capacity: int = 64           # per-slot prompt+generation budget
+    max_new: int = 8             # tokens per query (incl. prefill token)
+    prompt_len: int = 8          # query prompt tokens (from window data)
+    queries_per_stream: int = 1  # queries each grouped stream issues/window
+    eos_id: Optional[int] = None
+    gate_margin: float = 0.0     # candidate must beat incumbent by this
+    gate_members: int = 2        # members whose eval draws form the gate set
+    max_ticks_per_window: Optional[int] = None   # None = drain fully
+
+
+@dataclasses.dataclass
+class GateDecision:
+    """One `publish` outcome (the swap-gate audit record)."""
+    group_id: str
+    candidate_acc: float
+    incumbent_acc: float         # nan when the group was first seeded
+    accepted: bool
+    seeded: bool                 # first snapshot: installed ungated
+
+
+class ServingStore:
+    """Stacked per-group serving params: one device pytree with leaves
+    (capacity, ...), rows keyed by group id through `RowRegistry`
+    (amortized doubling, swap-with-last removal). Rows are COMMITTED
+    copies owned by the store — installs overwrite a row, they never
+    alias the training bank's donated buffers."""
+
+    def __init__(self):
+        self.reg = RowRegistry(capacity=4)
+        self._stack = None           # device leaves (capacity, ...)
+
+    def __contains__(self, group_id: str) -> bool:
+        return group_id in self.reg
+
+    def __len__(self) -> int:
+        return len(self.reg)
+
+    @property
+    def group_ids(self) -> List[str]:
+        return self.reg.ids
+
+    def install(self, group_id: str, params):
+        """Set `group_id`'s serving row to `params` (add or overwrite)."""
+        row, _ = self.reg.add(group_id)
+        if self._stack is None:
+            self._stack = jax.tree.map(
+                lambda x: jnp.zeros((self.reg.capacity,)
+                                    + tuple(np.shape(x)),
+                                    jnp.asarray(x).dtype), params)
+        elif self.reg.capacity > jax.tree.leaves(self._stack)[0].shape[0]:
+            pad = self.reg.capacity - jax.tree.leaves(self._stack)[0].shape[0]
+            self._stack = jax.tree.map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]),
+                self._stack)
+        self._stack = jax.tree.map(
+            lambda s, p: s.at[row].set(jnp.asarray(p).astype(s.dtype)),
+            self._stack, params)
+
+    def remove(self, group_id: str):
+        mv = self.reg.remove(group_id)
+        if mv is None:
+            return
+        dst, src = mv
+        if dst != src:
+            self._stack = jax.tree.map(lambda x: x.at[dst].set(x[src]),
+                                       self._stack)
+
+    def row(self, group_id: str):
+        """One group's serving params (fresh device buffers)."""
+        r = self.reg[group_id]
+        return jax.tree.map(lambda x: x[r], self._stack)
+
+    def stack(self):
+        """The full stacked params tree (leaves (capacity, ...))."""
+        return self._stack
+
+
+class FleetServePlane(ServeLoop):
+    """Batched fleet serving over the slot-pool cache, one model per
+    group, with the validated hot swap. Extends `ServeLoop` (admission
+    bookkeeping, retirement rule, drain API) with a query queue, a
+    `ServingStore` of per-group snapshots, per-(group, length) batched
+    admission, and a per-slot-params vmapped decode tick."""
+
+    def __init__(self, engine, scfg: Optional[ServeConfig] = None):
+        self.scfg = scfg = scfg or ServeConfig()
+        super().__init__(engine.model, None, num_slots=scfg.num_slots,
+                         capacity=scfg.capacity, eos_id=scfg.eos_id,
+                         max_new=scfg.max_new)
+        self.engine = engine
+        self.store = ServingStore()
+        self._fleet_decode = jax.jit(make_fleet_decode_step(engine.model))
+        self._queue: Deque[Tuple[str, str, np.ndarray]] = deque()
+        # swap-gate counters (cumulative) + per-group staleness
+        self.swap_seeded = 0
+        self.swap_accepted = 0
+        self.swap_rejected = 0
+        self.staleness: Dict[str, int] = {}
+        # run-lifetime tick log for pooled latency percentiles
+        # ((padded_lanes, seconds) per tick — the pad size marks which
+        # ticks compiled a new lane-count shape; one float pair per
+        # tick, negligible next to the KV pool)
+        self.tick_log: List[Tuple[int, float]] = []
+        self._last_pad = 0
+        # per-window accumulators (reset by window_report)
+        self._gate_log: List[GateDecision] = []
+        self._tick_times: List[float] = []
+        self._queries = 0
+        self._tokens = 0
+        self._ticks = 0
+        self._serve_seconds = 0.0
+        self._dropped = 0
+
+    # -- validated hot swap --------------------------------------------------
+    def publish(self, group_id: str, candidate_params,
+                eval_sample) -> GateDecision:
+        """Offer a freshly retrained `candidate_params` as `group_id`'s
+        serving snapshot. First publish seeds the group ungated (there
+        is no incumbent to regress); afterwards the candidate must beat
+        the incumbent on `eval_sample` by `gate_margin` or the
+        incumbent keeps serving and the miss is recorded."""
+        cand = float(self.engine.accuracy(candidate_params, eval_sample))
+        if group_id not in self.store:
+            self.store.install(group_id, candidate_params)
+            self.swap_seeded += 1
+            self.staleness[group_id] = 0
+            dec = GateDecision(group_id, cand, float("nan"), True, True)
+        else:
+            inc = float(self.engine.accuracy(self.store.row(group_id),
+                                             eval_sample))
+            if cand >= inc + self.scfg.gate_margin:
+                self.store.install(group_id, candidate_params)
+                self.swap_accepted += 1
+                self.staleness[group_id] = 0
+                dec = GateDecision(group_id, cand, inc, True, False)
+            else:
+                self.swap_rejected += 1
+                self.staleness[group_id] = self.staleness.get(group_id,
+                                                              0) + 1
+                dec = GateDecision(group_id, cand, inc, False, False)
+        self._gate_log.append(dec)
+        return dec
+
+    def drop_group(self, group_id: str):
+        """A group died (regrouping / fleet churn): retire its in-flight
+        requests, drop its queued queries, and free its serving row."""
+        for i, st in enumerate(self.mgr.slots):
+            if not st.done and st.group == group_id:
+                self._retire(i)
+        if self._queue:
+            kept = [q for q in self._queue if q[1] != group_id]
+            self._dropped += len(self._queue) - len(kept)
+            self._queue = deque(kept)
+        self.store.remove(group_id)
+        self.staleness.pop(group_id, None)
+
+    def prune(self, live_group_ids):
+        """Drop every serving row whose group is no longer live."""
+        live = set(live_group_ids)
+        for gid in list(self.store.group_ids):
+            if gid not in live:
+                self.drop_group(gid)
+
+    # -- query path ----------------------------------------------------------
+    def enqueue(self, request_id: str, group_id: str, prompt):
+        """Queue one query against `group_id`'s serving snapshot.
+        Capacity is validated here (admission would only defer the
+        error); unknown groups are resolved at admission time, when the
+        store membership is current."""
+        prompt = np.asarray(prompt)
+        self.mgr.check_fit(prompt.shape[-1], self.max_new)
+        self._queue.append((request_id, group_id, prompt))
+
+    def submit(self, request_id: str, prompt, *,
+               group: Optional[str] = None) -> int:
+        """Immediate single-request admission (tests / interactive
+        use); the window loop goes through enqueue + pump."""
+        if group is None:
+            raise TypeError("FleetServePlane.submit requires group=")
+        prompt = np.asarray(prompt)
+        slot = self.mgr.admit(request_id, prompt_len=prompt.shape[-1],
+                              max_new=self.max_new, group=group)
+        tok, cache, pos = self._prefill(self.store.row(group),
+                                        jnp.asarray(prompt)[None])
+        self.mgr.write_prefill(slot, cache, int(pos))
+        self._queries += 1
+        self._record_first(request_id, slot, int(np.asarray(tok)[0]))
+        return slot
+
+    def _admit_from_queue(self):
+        """Admit as many queued queries as there are free slots, one
+        batched prefill per (group, prompt-length) bucket."""
+        free = len(self.mgr.free_slots())
+        if not free or not self._queue:
+            return
+        take: List[Tuple[str, str, np.ndarray]] = []
+        while self._queue and len(take) < free:
+            rid, gid, prompt = self._queue.popleft()
+            if gid not in self.store:
+                self._dropped += 1
+                continue
+            take.append((rid, gid, prompt))
+        buckets: Dict[Tuple[str, int], List[Tuple[str, str, np.ndarray]]] = {}
+        for item in take:
+            buckets.setdefault((item[1], item[2].shape[-1]),
+                               []).append(item)
+        for (gid, _slen), items in buckets.items():
+            prompts = np.stack([p for _, _, p in items])
+            n = len(items)
+            pad = _pad_size(n)
+            if pad != n:        # pad lanes compute, never admit
+                prompts = np.concatenate(
+                    [prompts, np.repeat(prompts[-1:], pad - n, axis=0)])
+            tok, cache, pos = self._prefill(self.store.row(gid),
+                                            jnp.asarray(prompts))
+            slots = [self.mgr.admit(rid, prompt_len=prompts.shape[-1],
+                                    max_new=self.max_new, group=gid)
+                     for rid, _, _ in items]
+            self.mgr.write_prefill_many(slots, cache, int(pos))
+            toks = np.asarray(tok)[:n]
+            self._queries += n
+            for (rid, _, _), slot, t in zip(items, slots, toks):
+                self._record_first(rid, slot, int(t))
+
+    def tick(self) -> Dict[str, int]:
+        """One decode step for EVERY active slot in ONE launch: lanes
+        carry their own params row and position, so mixed groups and
+        staggered admissions still share the tick."""
+        act = self.mgr.active()
+        if not act:
+            return {}
+        rows, toks, poss = [], [], []
+        for i in act:
+            st = self.mgr.slots[i]
+            rows.append(self.store.reg[st.group])
+            toks.append(self._new_tokens[i])
+            poss.append(st.pos)
+        n = len(act)
+        pad = _pad_size(n)
+        self._last_pad = pad
+        lanes = act + [act[-1]] * (pad - n)
+        rows += [rows[-1]] * (pad - n)
+        toks += [toks[-1]] * (pad - n)
+        poss += [poss[-1]] * (pad - n)
+        sub = jax.tree.map(lambda c: c[:, jnp.asarray(lanes)],
+                           self.mgr.cache)
+        nxt, new_sub = self._fleet_decode(
+            self.store.stack(), jnp.asarray(rows, jnp.int32),
+            jnp.asarray(toks, jnp.int32), sub,
+            jnp.asarray(poss, jnp.int32))
+        sel = jnp.asarray(act)
+
+        def put(pool, one):
+            return pool.at[:, sel].set(one[:, :n].astype(pool.dtype))
+        self.mgr.cache = jax.tree.map(put, self.mgr.cache, new_sub)
+        nxt = np.asarray(nxt)[:n]
+        emitted: Dict[str, int] = {}
+        for i, t in zip(act, nxt):
+            rid = self._emit(i, int(t))
+            emitted[rid] = int(t)
+        self._ticks += 1
+        self._tokens += n
+        return emitted
+
+    def pump(self, *, max_ticks: Optional[int] = None) -> int:
+        """Admit + tick until the queue and the pool drain (or
+        `max_ticks` decode ticks elapse). Returns ticks run."""
+        if max_ticks is None:
+            max_ticks = self.scfg.max_ticks_per_window
+        t_start = time.perf_counter()
+        ran = 0
+        while self._queue or self.mgr.active():
+            if max_ticks is not None and ran >= max_ticks:
+                break
+            self._admit_from_queue()
+            if not self.mgr.active():
+                if not self._queue:
+                    break
+                continue
+            t0 = time.perf_counter()
+            self.tick()
+            dt = time.perf_counter() - t0
+            self._tick_times.append(dt)
+            self.tick_log.append((self._last_pad, dt))
+            ran += 1
+        self._serve_seconds += time.perf_counter() - t_start
+        return ran
+
+    # -- reporting -----------------------------------------------------------
+    def window_report(self) -> Dict:
+        """Per-window serving metrics; resets the window accumulators
+        (swap counters stay cumulative, mirroring the bench JSON)."""
+        tt = np.asarray(self._tick_times, np.float64)
+        rep = {
+            "queries": self._queries,
+            "tokens": self._tokens,
+            "ticks": self._ticks,
+            "dropped": self._dropped,
+            "serve_seconds": self._serve_seconds,
+            "qps": (self._queries / self._serve_seconds
+                    if self._serve_seconds > 0 else 0.0),
+            "p50_tick_ms": (float(np.percentile(tt, 50)) * 1e3
+                            if tt.size else 0.0),
+            "p99_tick_ms": (float(np.percentile(tt, 99)) * 1e3
+                            if tt.size else 0.0),
+            "groups": len(self.store),
+            "swap_seeded": self.swap_seeded,
+            "swap_accepted": self.swap_accepted,
+            "swap_rejected": self.swap_rejected,
+            "staleness": dict(self.staleness),
+            "gate": [dataclasses.asdict(d) for d in self._gate_log],
+        }
+        self._gate_log = []
+        self._tick_times = []
+        self._queries = self._tokens = self._ticks = 0
+        self._dropped = 0
+        self._serve_seconds = 0.0
+        return rep

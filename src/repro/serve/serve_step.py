@@ -43,6 +43,43 @@ def make_decode_step(model: Model, *, mesh=None, rules=None,
     return decode_step
 
 
+def make_fleet_decode_step(model: Model, *, moe_impl: str = "dense",
+                           compute_dtype=jnp.bfloat16):
+    """One decode step for a POOL of slots that serve DIFFERENT models:
+    each lane selects its own params row from a stacked per-group
+    params pytree and decodes at its own absolute position, so one
+    launch advances every active request of the fleet regardless of
+    which group model it queries or how far along it is (the scalar
+    `make_decode_step` shares one params tree and one scalar pos across
+    the batch, forcing one launch per (model, pos) bucket).
+
+    Returns fn(params_stack, rows, tokens, cache, pos) -> (next, cache):
+      * params_stack — leaves (groups, ...), the serving store's stack
+      * rows         — (A,) int32 params row per lane
+      * tokens       — (A,) int32 last emitted token per lane
+      * cache        — pool cache subtree with slot axis 1, A lanes
+      * pos          — (A,) int32 absolute position per lane
+
+    Per-lane math is exactly the B=1 scalar decode (vmap lanes are
+    independent), so emitted tokens are bit-identical to decoding each
+    slot alone — asserted by tests/test_serve.py.
+    """
+    def one(params, token, cache, pos):
+        cache_b = jax.tree.map(lambda c: c[:, None], cache)
+        logits, new_c = model.decode(params, token[None, None], cache_b,
+                                     pos, ctx=NULL_CTX, moe_impl=moe_impl,
+                                     compute_dtype=compute_dtype)
+        nxt = jnp.argmax(logits[0, -1].astype(jnp.float32), axis=-1)
+        return nxt.astype(jnp.int32), jax.tree.map(lambda c: c[:, 0], new_c)
+
+    def fleet_decode_step(params_stack, rows, tokens, cache, pos):
+        params = jax.tree.map(lambda x: x[rows], params_stack)
+        return jax.vmap(one, in_axes=(0, 0, 1, 0),
+                        out_axes=(0, 1))(params, tokens, cache, pos)
+
+    return fleet_decode_step
+
+
 def make_encode_step(model: Model, *, mesh=None, rules=None,
                      compute_dtype=jnp.bfloat16):
     """Encoder-only archs: full-sequence forward returning logits."""

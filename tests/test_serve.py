@@ -83,6 +83,129 @@ def test_serve_loop_batched_requests_drain():
     assert not loop.mgr.active()
 
 
+def _solo_outputs(model, params, prompt, max_new, capacity=32, eos_id=None):
+    """Reference transcript: a dedicated single-slot loop."""
+    loop = ServeLoop(model, params, num_slots=1, capacity=capacity,
+                     max_new=max_new, eos_id=eos_id)
+    loop.submit("solo", prompt)
+    loop.run_until_drained()
+    return loop.outputs["solo"]
+
+
+def test_submit_retires_at_max_new_1():
+    """The prefill's argmax IS emitted token #1: with max_new == 1 the
+    request is complete at submit time. The seed left it active — it
+    burned a decode tick and over-emitted a second token."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    loop = ServeLoop(model, params, num_slots=2, capacity=32, max_new=1)
+    loop.submit("a", prompt)
+    assert not loop.mgr.active()              # retired at submit
+    assert len(loop.outputs["a"]) == 1
+    assert loop.tick() == {}                  # nothing left to decode
+    assert len(loop.outputs["a"]) == 1        # no over-emission
+    done = loop.drain()                       # transcript handed over
+    assert set(done) == {"a"} and len(done["a"]) == 1
+    assert "a" not in loop.outputs
+
+
+def test_submit_retires_on_eos_prefill_token():
+    """EOS on the prefill token must retire the request at submit."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    first = _solo_outputs(model, params, prompt, max_new=4)[0]
+    loop = ServeLoop(model, params, num_slots=2, capacity=32, max_new=4,
+                     eos_id=first)
+    loop.submit("a", prompt)
+    assert not loop.mgr.active()
+    assert loop.outputs["a"] == [first]
+    assert loop.tick() == {}
+    assert loop.outputs["a"] == [first]
+
+
+def test_release_clears_per_slot_decode_state():
+    """Retirement must clear `_new_tokens` — the seed kept the dead
+    request's last token keyed by the slot, so a recycled slot could
+    replay it — and a recycled slot must serve the next request
+    bit-identically to a fresh loop."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(5)
+    p1 = rng.integers(0, cfg.vocab_size, size=8)
+    p2 = rng.integers(0, cfg.vocab_size, size=8)
+    loop = ServeLoop(model, params, num_slots=1, capacity=32, max_new=3)
+    slot1 = loop.submit("a", p1)
+    loop.run_until_drained()
+    assert loop._new_tokens == {}             # no dead-request residue
+    slot2 = loop.submit("b", p2)
+    assert slot2 == slot1                     # slot recycled
+    loop.run_until_drained()
+    assert loop.outputs["b"] == _solo_outputs(model, params, p2, 3)
+
+
+def test_drain_keeps_outputs_bounded():
+    """Continuous serving: finished transcripts leave via drain();
+    in-flight requests stay."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(6)
+    loop = ServeLoop(model, params, num_slots=4, capacity=32, max_new=2)
+    for i in range(3):
+        loop.submit(f"r{i}", rng.integers(0, cfg.vocab_size, size=8))
+    loop.run_until_drained()
+    loop.submit("late", rng.integers(0, cfg.vocab_size, size=8))
+    done = loop.drain()
+    assert set(done) == {"r0", "r1", "r2"}
+    assert all(len(v) == 2 for v in done.values())
+    assert set(loop.outputs) == {"late"}      # in-flight request kept
+    assert loop.drain() == {}                 # idempotent
+
+
+def test_admission_capacity_check():
+    """A prompt needs prompt_len + max_new - 1 <= capacity cache
+    positions; the seed prefilled oversized prompts into the slot
+    silently. Boundary: the exactly-fitting length admits."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(7)
+    cap, max_new = 16, 4
+    loop = ServeLoop(model, params, num_slots=2, capacity=cap,
+                     max_new=max_new)
+    fit = cap - max_new + 1
+    loop.submit("ok", rng.integers(0, cfg.vocab_size, size=fit))
+    loop.run_until_drained()
+    assert len(loop.outputs["ok"]) == max_new
+    with pytest.raises(ValueError, match="does not fit"):
+        loop.submit("big", rng.integers(0, cfg.vocab_size, size=fit + 1))
+    with pytest.raises(ValueError, match="max_new"):
+        loop.mgr.check_fit(4, 0)
+    assert len(loop.mgr.free_slots()) == 2    # nothing was admitted
+
+
+def test_multi_slot_tick_matches_sequential_decode():
+    """Batched-vs-sequential parity: a multi-slot tick over staggered
+    requests (different prompt lengths AND different positions) must
+    emit bit-identical tokens to decoding each request alone."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(8)
+    lens = [10, 7, 10, 5]
+    prompts = [rng.integers(0, cfg.vocab_size, size=s) for s in lens]
+    max_new = 5
+    loop = ServeLoop(model, params, num_slots=4, capacity=32,
+                     max_new=max_new)
+    # staggered admission: positions diverge across slots
+    loop.submit("r0", prompts[0])
+    loop.tick()
+    loop.submit("r1", prompts[1])
+    loop.submit("r2", prompts[2])
+    loop.tick()
+    loop.submit("r3", prompts[3])
+    loop.run_until_drained()
+    for i, p in enumerate(prompts):
+        want = _solo_outputs(model, params, p, max_new)
+        assert loop.outputs[f"r{i}"] == want, (i, loop.outputs[f"r{i}"],
+                                               want)
+
+
 def test_serve_loop_isolation_between_requests():
     """A second concurrent request must not change the first one's
     output (cache isolation across slots)."""

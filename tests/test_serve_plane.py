@@ -1,0 +1,264 @@
+"""Fleet serving plane tests: serving store churn, the validated hot
+swap (EdgeSync-style gate), batched mixed-group decode parity against
+dedicated per-group loops, and the controller integration (serving is
+read-only w.r.t. the decision planes)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.controller import ControllerConfig, ECCOController
+from repro.core.trainer import SharedEngine
+from repro.data.streams import make_fleet
+from repro.serve.kvcache import ServeLoop
+from repro.serve.plane import (FleetServePlane, ServeConfig, ServingStore,
+                               _pad_size)
+
+VOCAB = 64
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = dataclasses.replace(smoke_config("olmo-1b"), vocab_size=VOCAB)
+    return SharedEngine(cfg)
+
+
+def _params(engine, seed):
+    return engine.model.init(jax.random.PRNGKey(seed))
+
+
+def _prompts(n, slen, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, VOCAB, size=slen) for _ in range(n)]
+
+
+def _solo(engine, params, prompt, max_new, capacity):
+    loop = ServeLoop(engine.model, params, num_slots=1, capacity=capacity,
+                     max_new=max_new)
+    loop.submit("solo", prompt)
+    loop.run_until_drained()
+    return loop.outputs["solo"]
+
+
+# -- shape grid ---------------------------------------------------------------
+
+def test_pad_size_grid():
+    assert [_pad_size(n) for n in range(1, 9)] == [1, 2, 3, 4, 6, 6, 8, 8]
+    assert _pad_size(9) == 12 and _pad_size(13) == 16
+
+
+# -- serving store ------------------------------------------------------------
+
+def test_store_install_overwrite_remove(engine):
+    st = ServingStore()
+    p0, p1, p2 = (_params(engine, s) for s in (0, 1, 2))
+    for gid, p in (("g0", p0), ("g1", p1), ("g2", p2)):
+        st.install(gid, p)
+    assert len(st) == 3
+    leaf = lambda p: np.asarray(jax.tree.leaves(p)[0])
+
+    np.testing.assert_array_equal(leaf(st.row("g1")), leaf(p1))
+    st.install("g1", p0)                      # overwrite in place
+    np.testing.assert_array_equal(leaf(st.row("g1")), leaf(p0))
+
+    st.remove("g1")                           # swap-with-last removal
+    assert len(st) == 2 and "g1" not in st
+    np.testing.assert_array_equal(leaf(st.row("g0")), leaf(p0))
+    np.testing.assert_array_equal(leaf(st.row("g2")), leaf(p2))
+
+    # growth past the initial registry capacity keeps rows intact
+    for i in range(3, 9):
+        st.install(f"g{i}", p1)
+    np.testing.assert_array_equal(leaf(st.row("g2")), leaf(p2))
+    assert len(st) == 8
+
+
+# -- validated hot swap -------------------------------------------------------
+
+def test_gate_seeds_ungated_then_accepts_tie(engine):
+    plane = FleetServePlane(engine, ServeConfig(num_slots=4))
+    p = _params(engine, 0)
+    sample = np.stack(_prompts(4, 16, seed=1))
+    d0 = plane.publish("g0", p, sample)
+    assert d0.seeded and d0.accepted and np.isnan(d0.incumbent_acc)
+    assert plane.swap_seeded == 1 and plane.staleness["g0"] == 0
+    # identical candidate ties the incumbent: accepted at margin 0.0
+    d1 = plane.publish("g0", p, sample)
+    assert not d1.seeded and d1.accepted
+    assert d1.candidate_acc == d1.incumbent_acc
+    assert plane.swap_accepted == 1 and plane.staleness["g0"] == 0
+
+
+def test_gate_rejection_keeps_incumbent_serving(engine):
+    scfg = ServeConfig(num_slots=4, capacity=32, max_new=4,
+                       gate_margin=1.1)   # > any accuracy delta: no
+    plane = FleetServePlane(engine, scfg)  # candidate can ever pass
+    inc, cand = _params(engine, 0), _params(engine, 1)
+    sample = np.stack(_prompts(4, 16, seed=2))
+    plane.publish("g0", inc, sample)      # seeding ignores the margin
+
+    for k in (1, 2):                      # repeated misses accumulate
+        d = plane.publish("g0", cand, sample)
+        assert not d.accepted and not d.seeded
+        assert plane.swap_rejected == k and plane.staleness["g0"] == k
+
+    # the incumbent, not the rejected candidate, answers queries
+    prompt = _prompts(1, 8, seed=3)[0]
+    plane.submit("q", prompt, group="g0")
+    plane.run_until_drained()
+    assert plane.outputs["q"] == _solo(engine, inc, prompt, 4, 32)
+    rep = plane.window_report()
+    assert rep["swap_rejected"] == 2 and rep["staleness"] == {"g0": 2}
+    assert [g["accepted"] for g in rep["gate"]] == [True, False, False]
+
+
+def test_gate_accepts_when_candidate_clears_margin(engine):
+    plane = FleetServePlane(engine, ServeConfig(num_slots=4, capacity=32,
+                                                max_new=4,
+                                                gate_margin=-1.1))
+    inc, cand = _params(engine, 0), _params(engine, 1)
+    sample = np.stack(_prompts(4, 16, seed=4))
+    plane.publish("g0", inc, sample)
+    d = plane.publish("g0", cand, sample)  # margin -1.1: always clears
+    assert d.accepted and plane.swap_accepted == 1
+    prompt = _prompts(1, 8, seed=5)[0]
+    plane.submit("q", prompt, group="g0")
+    plane.run_until_drained()
+    assert plane.outputs["q"] == _solo(engine, cand, prompt, 4, 32)
+
+
+# -- batched fleet decode -----------------------------------------------------
+
+def test_fleet_parity_mixed_groups_with_churn(engine):
+    """More queries than slots across two groups with DIFFERENT params:
+    the shared-tick vmapped decode plus slot recycling must reproduce
+    each dedicated per-group loop bit-for-bit."""
+    scfg = ServeConfig(num_slots=3, capacity=32, max_new=5, prompt_len=8)
+    plane = FleetServePlane(engine, scfg)
+    pa, pb = _params(engine, 0), _params(engine, 1)
+    sample = np.stack(_prompts(2, 16, seed=6))
+    plane.publish("ga", pa, sample)
+    plane.publish("gb", pb, sample)
+    want = {}
+    for q in range(4):
+        for gid, p in (("ga", pa), ("gb", pb)):
+            prompt = _prompts(1, 8, seed=10 + 2 * q + (gid == "gb"))[0]
+            plane.enqueue(f"{gid}/q{q}", gid, prompt)
+            want[f"{gid}/q{q}"] = _solo(engine, p, prompt, 5, 32)
+    plane.pump()
+    got = plane.drain()
+    assert got == want
+    rep = plane.window_report()
+    assert rep["queries"] == 8 and rep["dropped"] == 0
+    assert rep["ticks"] > 0 and rep["p99_tick_ms"] > 0.0
+
+
+def test_enqueue_validates_capacity_and_unknown_group_drops(engine):
+    scfg = ServeConfig(num_slots=2, capacity=16, max_new=4)
+    plane = FleetServePlane(engine, scfg)
+    plane.publish("g0", _params(engine, 0),
+                  np.stack(_prompts(2, 16, seed=7)))
+    with pytest.raises(ValueError, match="does not fit"):
+        plane.enqueue("big", "g0", _prompts(1, 14, seed=8)[0])
+    plane.enqueue("ghost", "dead-group", _prompts(1, 8, seed=9)[0])
+    plane.pump()
+    assert plane.window_report()["dropped"] == 1
+    assert "ghost" not in plane.outputs
+
+
+def test_drop_group_retires_inflight_and_queued(engine):
+    scfg = ServeConfig(num_slots=4, capacity=32, max_new=6)
+    plane = FleetServePlane(engine, scfg)
+    plane.publish("g0", _params(engine, 0),
+                  np.stack(_prompts(2, 16, seed=11)))
+    plane.submit("live", _prompts(1, 8, seed=12)[0], group="g0")
+    plane.enqueue("queued", "g0", _prompts(1, 8, seed=13)[0])
+    assert plane.mgr.active()
+    plane.drop_group("g0")
+    assert not plane.mgr.active() and not plane._queue
+    assert len(plane.store) == 0 and plane._new_tokens == {}
+    assert plane.pump() == 0
+
+
+# -- controller integration ---------------------------------------------------
+
+def _mini_fleet(seed=0):
+    _, streams = make_fleet(regions=2, streams_per_region=2,
+                            switch_times=(10.0,), seed=seed)
+    return streams
+
+
+def _mini_cc(**over):
+    return ControllerConfig(window_micro=2, micro_steps=2, train_batch=4,
+                            sample_rate=4, eval_batch=8, p_drop=0.0,
+                            **over)
+
+
+def _decisions(history):
+    """Decision-plane surface with job ids canonicalized by first
+    appearance (raw ids come from a process-global counter)."""
+    name = {}
+
+    def canon(jid):
+        return name.setdefault(jid, f"g{len(name)}")
+
+    out = []
+    for wm in history:
+        out.append({
+            "t": wm.t,
+            "groups": {canon(j): sorted(m) for j, m in wm.groups.items()},
+            "shares": {canon(j): round(v, 6)
+                       for j, v in wm.shares.items()},
+            "acc": {s: None if np.isnan(v) else round(v, 6)
+                    for s, v in wm.per_stream_acc.items()},
+        })
+    return out
+
+
+def test_controller_serving_is_readonly(engine):
+    """Enabling the serving plane must not move a single decision:
+    same grouping, same shares, same accuracies, window for window."""
+    off = ECCOController(engine, _mini_fleet(), _mini_cc(), seed=0)
+    off.run(3)
+    scfg = ServeConfig(num_slots=8, capacity=32, max_new=4, prompt_len=8)
+    on = ECCOController(engine, _mini_fleet(), _mini_cc(serve=scfg),
+                        seed=0)
+    on.run(3)
+    assert _decisions(off.history) == _decisions(on.history)
+    assert all(wm.serve is None for wm in off.history)
+    # ...and the plane actually served once groups formed (t=20)
+    assert on.history[2].serve["queries"] > 0
+
+
+def test_controller_serve_window_reports_and_gate(engine):
+    """Window reports carry qps/latency and the swap audit: groups are
+    seeded ungated the window they form; with an impossible margin
+    every later publish is rejected and staleness grows while the
+    incumbent keeps serving."""
+    scfg = ServeConfig(num_slots=8, capacity=32, max_new=4, prompt_len=8,
+                       gate_margin=1.1)
+    ctl = ECCOController(engine, _mini_fleet(), _mini_cc(serve=scfg),
+                         seed=0)
+    ctl.run(4)
+    h = ctl.history
+    assert h[0].serve["queries"] == 0          # no groups yet: idle plane
+    for wm in h[1:]:                           # every serving window:
+        s = wm.serve
+        assert s["groups"] == len(wm.groups)   # store mirrors live groups
+        assert set(s["staleness"]) == set(wm.groups)
+        assert s["queries"] == sum(len(m) for m in wm.groups.values())
+        assert s["tokens"] > 0 and s["qps"] > 0 and s["p99_tick_ms"] > 0
+        # a group is seeded ungated the window it appears...
+        fresh = [g for g in s["gate"] if g["seeded"]]
+        assert all(g["accepted"] for g in fresh)
+        # ...and with an impossible margin every later publish misses
+        assert all(not g["accepted"] for g in s["gate"] if not g["seeded"])
+    assert h[-1].serve["swap_accepted"] == 0
+    # final window: groups are stable, so every candidate hits the gate,
+    # misses, and staleness ticks up while the incumbent keeps serving
+    last = h[-1].serve
+    assert last["swap_rejected"] == len(h[-1].groups) and last["groups"] > 0
+    assert all(v == 1 for v in last["staleness"].values())
