@@ -39,6 +39,7 @@ import numpy as np
 
 from benchmarks.common import Rows, make_engine
 from repro.configs import smoke_config
+from repro.core.batching import job_precision
 from repro.core.grouping import Request
 from repro.core.trainer import RetrainJob, SharedEngine
 
@@ -136,6 +137,7 @@ def _eval_plane(rows: Rows, engine, sizes, results):
         rows.add(f"eval_n{members}_speedup", sp)
         results["eval_plane"].append(dict(
             members=members, jobs=len(jobs), pairs=len(pairs),
+            precision=job_precision(jobs[0]),
             scalar_s=round(t_scalar, 4), batched_s=round(t_batched, 4),
             speedup=round(sp, 2), batched_sync=sync))
         for j in jobs:
@@ -189,6 +191,7 @@ def _train_plane(rows: Rows, engine, scalar_engine, sizes, results,
         rows.add(f"train_n{members}_speedup", sp)
         results["train_plane"].append(dict(
             members=members, jobs=len(fast),
+            precision=job_precision(fast[0]),
             micro_windows=micro_windows,
             scalar_s=round(t_scalar, 4), batched_s=round(t_batched, 4),
             speedup=round(sp, 2), batched_sync=bsync, scalar_sync=ssync))

@@ -24,7 +24,7 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
-from repro.core.batching import shared_engine
+from repro.core.batching import engine_groups, shared_engine
 
 
 @dataclasses.dataclass
@@ -34,6 +34,13 @@ class AllocationTrace:
     acc: Dict[str, List[float]]           # accuracy trajectory per job
     shares: Dict[str, float]              # estimated GPU share p_j
     gpu_time: Dict[str, int]              # micro-windows consumed per job
+    # explicit window annotations (e.g. the eval-only degrade of a
+    # window whose budget is smaller than one micro-step) — empty on
+    # the seed path, so golden traces never see it
+    notes: List[str] = dataclasses.field(default_factory=list)
+    # WindowBudget.report() of the window's meter (roofline-metered
+    # windows only; None on the seed unitless path)
+    budget: Optional[Dict] = None
 
 
 class ECCOAllocator:
@@ -68,9 +75,22 @@ class ECCOAllocator:
     def run_window(self, jobs: Sequence, window_micro: int, *,
                    stragglers=None, deadline: Optional[float] = None,
                    clock: Optional[Callable[[], float]] = None,
-                   barrier: Optional[Callable[[], None]] = None
-                   ) -> AllocationTrace:
+                   barrier: Optional[Callable[[], None]] = None,
+                   meter=None) -> AllocationTrace:
         """Run one retraining window of `window_micro` micro-windows.
+
+        `meter`: optional launch.roofline.RooflineMeter. When set, each
+        micro-window is converted into metered roofline cost (the job's
+        own model config, batch, and precision policy price it) and
+        charged against the meter's fleet-wide WindowBudget; the greedy
+        pick maximizes objective gain PER METERED COST, so a
+        budget-pressured fleet prefers jobs whose backbone/precision is
+        cheaper instead of starving. `window_micro` stays an upper
+        bound on micro-window count. A window whose remaining budget
+        cannot afford one micro-step for ANY job (or window_micro <= 0)
+        degrades to an eval-only window with an explicit trace note
+        instead of silently doing nothing. None = the seed unitless
+        path, byte-identical (golden traces).
 
         `stragglers`: optional distributed.stragglers.StragglerPolicy.
         When set, every micro-window is wall-clock timed per job and a
@@ -105,6 +125,13 @@ class ECCOAllocator:
         order: List[str] = []
         traj: Dict[str, List[float]] = {j.job_id: [] for j in jobs}
         used: Dict[str, int] = {j.job_id: 0 for j in jobs}
+        notes: List[str] = []
+        # per-window metered price of one micro-window per job (the
+        # meter caches compiled costs, so this is dict math)
+        micro_cost: Optional[Dict[str, float]] = None
+        if meter is not None:
+            micro_cost = {j.job_id: max(meter.micro_cost(j), 1e-12)
+                          for j in jobs}
 
         def record(j, a_i, a_f):
             # the ONE bookkeeping path for a measured micro-window —
@@ -112,11 +139,55 @@ class ECCOAllocator:
             # identical (bit-identity contract, golden-trace pinned)
             nonlocal budget
             budget -= 1
+            if meter is not None:
+                meter.charge(meter.train_cost(j), "train")
+                meter.charge(2 * meter.eval_cost(j), "eval")
             acc[j.job_id] = a_f
             acc_gain[j.job_id] = a_f - a_i
             order.append(j.job_id)
             traj[j.job_id].append(a_f)
             used[j.job_id] += 1
+
+        def eval_only(reason: str) -> AllocationTrace:
+            # the degraded window: no training, but the fleet is still
+            # MEASURED once (the controller's shares/metrics consumers
+            # need accuracies), and the trace says why out loud.
+            # last_gains is left untouched so estimate_shares keeps
+            # serving the last real window's signal.
+            notes.append(reason)
+            vals: List[float] = [0.0] * len(jobs)
+            # per-engine batched dispatch: a zoo fleet (mixed engines)
+            # still evals each model class in one fleet call
+            for grp_eng, idxs in engine_groups(jobs):
+                if grp_eng is None:
+                    for i in idxs:
+                        vals[i] = jobs[i].eval()
+                else:
+                    sub = grp_eng.eval_jobs([jobs[i] for i in idxs])
+                    for i, a in zip(idxs, sub):
+                        vals[i] = a
+            for j, a in zip(jobs, vals):
+                acc[j.job_id] = float(a)
+                traj[j.job_id].append(float(a))
+                if meter is not None:
+                    meter.charge(meter.eval_cost(j), "eval")
+            return AllocationTrace(
+                order=order, acc=traj,
+                shares=self._shares_from_gains(jobs, {}), gpu_time=used,
+                notes=notes,
+                budget=meter.report() if meter is not None else None)
+
+        if window_micro <= 0:
+            return eval_only(
+                f"window_micro={window_micro} < 1 micro-window: degraded "
+                f"to eval-only window")
+        if meter is not None and \
+                not any(meter.can_afford(micro_cost[j.job_id])
+                        for j in jobs):
+            return eval_only(
+                f"roofline budget (remaining "
+                f"{meter.budget.remaining:.3e}s) smaller than one "
+                f"micro-step for every job: degraded to eval-only window")
 
         def micro_retraining(j):
             if barrier is not None:
@@ -151,7 +222,22 @@ class ECCOAllocator:
         # indices (the residency contract in repro.core.batching), so
         # the measurement pass itself moves no state across the host
         # boundary.
-        head = jobs[:min(budget, len(jobs))]
+        if meter is None:
+            head = jobs[:min(budget, len(jobs))]
+        else:
+            # metered initial pass: grant first micro-windows in fleet
+            # order while the window budget can afford them; jobs left
+            # out simply have no measured gain yet (0.0 in the
+            # objective), exactly like budget < |J| on the seed path
+            head, rem = [], meter.budget.remaining
+            for j in jobs:
+                if len(head) >= budget:
+                    break
+                c = micro_cost[j.job_id]
+                if rem - c < -1e-12 * max(1.0, meter.budget.total):
+                    continue
+                head.append(j)
+                rem -= c
         eng = shared_engine(head) if (head and stragglers is None) \
             else None
         if eng is not None:
@@ -171,7 +257,22 @@ class ECCOAllocator:
         while budget > 0:
             if deadline is not None and clock() - t0 >= deadline:
                 break     # window deadline: drop the leftover budget
-            jid = max(gains, key=gains.get)
+            if meter is None:
+                jid = max(gains, key=gains.get)
+            else:
+                # Alg. 1 objective with metered cost in the
+                # denominator: accuracy gain per modeled device-second,
+                # restricted to jobs the remaining budget can afford —
+                # a cheaper backbone/precision wins ties against an
+                # equally-improving expensive one
+                afford = [k for k in gains
+                          if meter.can_afford(micro_cost[k])]
+                if not afford:
+                    notes.append(
+                        "roofline budget exhausted: "
+                        f"{budget} micro-window(s) dropped")
+                    break
+                jid = max(afford, key=lambda k: gains[k] / micro_cost[k])
             micro_retraining(by_id[jid])
             gains = self._objective_gains(jobs, acc, acc_gain)
 
@@ -181,7 +282,9 @@ class ECCOAllocator:
         self.last_gains = dict(gains)
         shares = self._shares_from_gains(jobs, gains)
         return AllocationTrace(order=order, acc=traj, shares=shares,
-                               gpu_time=used)
+                               gpu_time=used, notes=notes,
+                               budget=meter.report() if meter is not None
+                               else None)
 
     def estimate_shares(self, jobs, gains=None) -> Dict[str, float]:
         """p_j from the latest objective gains (Line 15 of Alg. 1)."""

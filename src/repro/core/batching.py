@@ -25,6 +25,37 @@ stays on the scalar loop.
 """
 from __future__ import annotations
 
+from typing import Dict, List, Tuple
+
+
+def job_precision(job) -> str:
+    """A job's decision-plane screen precision tag
+    (docs/scheduling.md). Duck-typed fakes and legacy jobs without the
+    attribute screen in fp32 — the seed path."""
+    return getattr(job, "precision", "fp32") or "fp32"
+
+
+def engine_groups(jobs) -> List[Tuple[object, List[int]]]:
+    """Partition `jobs` into per-engine runs for batched dispatch over
+    a HETEROGENEOUS fleet (zoo fleets carry several model classes, one
+    SharedEngine each). Returns [(engine_or_None, indices)] with
+    indices into `jobs`, preserving fleet order within each group;
+    group order follows first appearance, so a single-engine fleet
+    reduces to exactly one group covering today's order (bit-identity
+    contract). Jobs the probe rejects (fakes, freed slots) collect
+    under the None key for the caller's scalar fallback. Duplicates in
+    `jobs` are fine — each position keeps its own index."""
+    order: List[object] = []
+    groups: Dict[object, Tuple[object, List[int]]] = {}
+    for i, j in enumerate(jobs):
+        eng = shared_engine([j])
+        k = id(eng) if eng is not None else None
+        if k not in groups:
+            groups[k] = (eng, [])
+            order.append(k)
+        groups[k][1].append(i)
+    return [groups[k] for k in order]
+
 
 def shared_engine(jobs):
     """The batch-capable SharedEngine shared by every job in `jobs`,

@@ -10,9 +10,10 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.configs.base import ModelConfig
 from repro.core import trainer as _trainer
 from repro.core.allocator import ECCOAllocator, AllocationTrace
-from repro.core.batching import shared_engine
+from repro.core.batching import engine_groups, shared_engine
 from repro.core.drift import FleetDriftDetector, batch_token_histogram
 from repro.core.grouping import Grouper, Request
 from repro.core.signature_index import SignatureIndex
@@ -65,6 +66,25 @@ class ControllerConfig:
     # set from the metrics eval draws), so enabling it changes no
     # retraining/grouping/transmission decision and consumes no rng.
     serve: Optional[ServeConfig] = None
+    # -- roofline-budgeted co-scheduling (docs/scheduling.md) ----------
+    # Fleet-wide modeled device-seconds per window, covering the train
+    # pass, the allocator/grouper/metrics eval passes, and (when
+    # `serve` is on) serve-plane ticks — DaCapo-style co-scheduling on
+    # ONE compute budget. The grouping/metrics/serve shares are
+    # RESERVED up front each window, so retraining competes only for
+    # the remainder; the allocator then maximizes gain per metered
+    # cost. None = the seed unitless path (golden traces).
+    roofline_budget: Optional[float] = None
+    # launch.roofline.CostTable to price windows with; None builds one
+    # lazily on first metered window (shared across windows — the
+    # cache is the point)
+    cost_table: Optional[object] = None
+    # decision-plane screen precision for NEW jobs ("fp32" | "bf16").
+    # bf16 jobs eval against the bank's cast-at-flush compute stack;
+    # near-threshold grouping decisions rescore in fp32 when
+    # `rescore_margin` > 0, and the serve gate always validates fp32.
+    job_precision: str = "fp32"
+    rescore_margin: float = 0.0
 
 
 @dataclasses.dataclass
@@ -81,6 +101,9 @@ class WindowMetrics:
     # qps / tick latency / swap-gate counters / per-group staleness.
     # None whenever ControllerConfig.serve is off.
     serve: Optional[Dict] = None
+    # roofline ledger for the window (WindowBudget.report plus the
+    # allocator's degrade/drop notes); None when metering is off
+    roofline: Optional[Dict] = None
 
 
 class ECCOController:
@@ -91,7 +114,7 @@ class ECCOController:
 
     def __init__(self, engine: SharedEngine, streams: Sequence[Stream],
                  cc: Optional[ControllerConfig] = None, *, seed: int = 0,
-                 mesh=None, elastic=None, stragglers=None):
+                 mesh=None, elastic=None, stragglers=None, zoo=None):
         """`mesh`: optional 1-D fleet device mesh (launch.mesh.
         make_fleet_mesh) — every decision plane shards its row axis
         over it (JobBank slots, drift rows, signature columns), with
@@ -101,7 +124,13 @@ class ECCOController:
         re-meshing and re-running the window. `stragglers`: optional
         distributed.stragglers.StragglerPolicy, wired into the
         allocator's micro-window loop together with
-        cc.window_deadline."""
+        cc.window_deadline. `zoo`: optional sequence of additional
+        SharedEngines (smaller model classes from configs' zoo) a
+        metered controller may place NEW jobs on — under budget
+        pressure `_new_job` picks the largest tier whose micro-window
+        cost fits the job's fair share of the window budget
+        (docs/scheduling.md). Requires cc.roofline_budget; ignored
+        otherwise (seed fleets stay homogeneous)."""
         self.engine = engine
         self.streams = list(streams)
         self.cc = cc or ControllerConfig()
@@ -121,7 +150,12 @@ class ECCOController:
                                p_drop=self.cc.p_drop,
                                new_job_fn=self._new_job,
                                index=self.sig_index,
-                               shortlist_k=self.cc.shortlist_k)
+                               shortlist_k=self.cc.shortlist_k,
+                               rescore_margin=self.cc.rescore_margin)
+        # model-class tiers for metered job placement: the primary
+        # engine plus any zoo engines, priced lazily per window
+        self.zoo: List[SharedEngine] = list(zoo or [])
+        self._cost_table = self.cc.cost_table
         self.jobs: List[RetrainJob] = []
         table = self.cc.profile_table
         if table is None:
@@ -161,8 +195,91 @@ class ECCOController:
 
     # ------------------------------------------------------------------
     def _new_job(self, req: Request) -> RetrainJob:
-        return RetrainJob(self.engine, req, micro_steps=self.cc.micro_steps,
-                          batch=self.cc.train_batch, seed=self._seed)
+        return RetrainJob(self._pick_engine(), req,
+                          micro_steps=self.cc.micro_steps,
+                          batch=self.cc.train_batch, seed=self._seed,
+                          precision=self.cc.job_precision)
+
+    # -- roofline co-scheduling (docs/scheduling.md) --------------------
+    def _table(self):
+        """The shared CostTable, built lazily on the first metered
+        window (compiled-cost caching across windows is the point)."""
+        if self._cost_table is None:
+            from repro.launch.roofline import CostTable
+            self._cost_table = CostTable()
+        return self._cost_table
+
+    def _micro_seconds(self, cfg, precision: str) -> float:
+        """Modeled seconds of one allocator micro-window (train pass +
+        the two bracketing evals) for a job on `cfg` at the controller
+        batch settings."""
+        cc = self.cc
+        tbl = self._table()
+        return (cc.micro_steps * tbl.seconds(
+                    cfg, batch=cc.train_batch, seq=cc.seq_len,
+                    kind="train", precision=precision)
+                + 2 * tbl.seconds(
+                    cfg, batch=cc.eval_batch, seq=cc.seq_len,
+                    kind="eval", precision=precision))
+
+    def _pick_engine(self) -> SharedEngine:
+        """Model class for a NEW job: without metering (or a zoo) the
+        primary engine — seed semantics. Under a roofline budget, the
+        costliest tier whose one micro-window fits the job's fair share
+        of the window budget, `budget / (window_micro * (jobs + 1))`;
+        a fleet under budget pressure retrains a smaller backbone
+        rather than starve (Alg. 1 gain/cost discipline, DaCapo's
+        accuracy-per-FLOP slicing)."""
+        cc = self.cc
+        if not self.zoo or cc.roofline_budget is None:
+            return self.engine
+        prec = cc.job_precision
+        tiers = sorted(
+            [self.engine] + self.zoo,
+            key=lambda e: self._micro_seconds(e.cfg, prec), reverse=True)
+        fair = cc.roofline_budget / max(1, cc.window_micro) \
+            / (len(self.jobs) + 1)
+        for e in tiers:
+            if self._micro_seconds(e.cfg, prec) <= fair:
+                return e
+        return tiers[-1]          # nothing fits: cheapest tier
+
+    def _window_meter(self):
+        """Fresh RooflineMeter for this window, or None (seed path)."""
+        if self.cc.roofline_budget is None:
+            return None
+        from repro.launch.roofline import RooflineMeter
+        return RooflineMeter(self._table(), self.cc.roofline_budget,
+                             seq_len=self.cc.seq_len,
+                             eval_batch=self.cc.eval_batch)
+
+    def _reserve_overheads(self, meter):
+        """Charge the window's NON-allocator compute up front so
+        retraining competes only for the remainder: the Alg. 2
+        update-grouping screens (one eval per member), the window
+        metrics eval (one eval per grouped stream), and — when serving
+        is on — each group's fp32 gate validation plus its streams'
+        query prefill/decode ticks."""
+        cc = self.cc
+        for j in self.jobs:
+            meter.charge(meter.eval_cost(j), "grouping")
+            meter.charge(meter.eval_cost(j), "metrics")
+        if self.serve_plane is None:
+            return
+        scfg = cc.serve
+        tbl = self._table()
+        for j in self.jobs:
+            cfg = getattr(getattr(j, "engine", None), "cfg", None)
+            if not isinstance(cfg, ModelConfig):
+                continue
+            # validation gate: candidate + incumbent, always fp32
+            meter.charge(2 * tbl.seconds(
+                cfg, batch=cc.eval_batch, seq=cc.seq_len, kind="eval",
+                precision="fp32"), "serve")
+            meter.charge(meter.serve_cost(
+                cfg, queries=j.num_members * scfg.queries_per_stream,
+                prompt_len=max(1, scfg.prompt_len),
+                gen_tokens=scfg.max_new), "serve")
 
     def _jobs_by_stream(self) -> Dict[str, RetrainJob]:
         """One O(members) pass; callers iterating the whole fleet grab
@@ -310,6 +427,8 @@ class ECCOController:
     def _run_window_inner(self) -> WindowMetrics:
         cc = self.cc
         t = self.t
+        meter = self._window_meter()   # None = seed unmetered path
+        alloc_trace: Optional[AllocationTrace] = None
 
         # 1. live data + drift detection -> retraining requests.
         # Sampling stays per-stream (each stream owns its rng), but
@@ -398,13 +517,19 @@ class ECCOController:
             # 4. allocator runs the retraining window (Alg. 1), under
             # the elastic barrier (one health check per micro-window),
             # the straggler quota policy, and the window deadline —
-            # all no-ops when unset (seed semantics)
-            self.allocator.run_window(
+            # all no-ops when unset (seed semantics). With a roofline
+            # budget the window's eval/serve co-tenants are charged
+            # FIRST (DaCapo-style reservation) and the allocator
+            # maximizes gain per metered cost over the remainder.
+            if meter is not None:
+                self._reserve_overheads(meter)
+            alloc_trace = self.allocator.run_window(
                 self.jobs, cc.window_micro,
                 stragglers=self.stragglers,
                 deadline=cc.window_deadline,
                 barrier=(self.elastic.barrier if self.elastic is not None
-                         else None))
+                         else None),
+                meter=meter)
 
             # 5. periodic regrouping (Alg. 2 UpdateGrouping) — evaluated
             # on each member's RECENT window data (the paper's
@@ -441,13 +566,20 @@ class ECCOController:
         grouped = [s.stream_id for s in self.streams
                    if by_stream.get(s.stream_id) is not None]
         gjobs = [by_stream[sid] for sid in grouped]
-        eng = shared_engine(gjobs) if gjobs else None
-        if eng is not None:
-            vals = eng.eval_pairs([(j, evs[sid])
-                                   for sid, j in zip(grouped, gjobs)])
-        else:
-            vals = [j.eval_on(evs[sid])
-                    for sid, j in zip(grouped, gjobs)]
+        # per-engine batched dispatch (engine_groups): a homogeneous
+        # fleet is one group in fleet order — the seed's single
+        # eval_pairs call — while a zoo fleet gets one batched call per
+        # model class plus a scalar fallback for probe-rejected jobs
+        vals: List[float] = [0.0] * len(gjobs)
+        for grp_eng, idxs in engine_groups(gjobs):
+            if grp_eng is None:
+                for i in idxs:
+                    vals[i] = gjobs[i].eval_on(evs[grouped[i]])
+            else:
+                sub = grp_eng.eval_pairs(
+                    [(gjobs[i], evs[grouped[i]]) for i in idxs])
+                for i, a in zip(idxs, sub):
+                    vals[i] = a
         got = dict(zip(grouped, vals))
         for s in self.streams:
             acc[s.stream_id] = got.get(s.stream_id, float("nan"))
@@ -464,9 +596,15 @@ class ECCOController:
 
         groups = {j.job_id: [m.stream_id for m in j.members]
                   for j in self.jobs}
+        roofline = None
+        if meter is not None:
+            roofline = meter.report()
+            roofline["notes"] = list(alloc_trace.notes) \
+                if alloc_trace is not None else []
         wm = WindowMetrics(t=t, per_stream_acc=acc, groups=groups,
                            shares=shares, bandwidth=bw,
-                           delivered=delivered, serve=serve_report)
+                           delivered=delivered, serve=serve_report,
+                           roofline=roofline)
         self.history.append(wm)
         self.t += cc.window_seconds
         return wm
@@ -488,6 +626,11 @@ class ECCOController:
         sp = self.serve_plane
         scfg = self.cc.serve
         for j in self.jobs:
+            # the serve plane decodes with ITS engine's model; a zoo
+            # job on a different model class can't publish its params
+            # there (shape mismatch) — its streams keep the incumbent
+            if getattr(j, "engine", None) is not sp.engine:
+                continue
             ms = [m for m in j.members if m.stream_id in evs]
             ms = ms[:max(1, scfg.gate_members)]
             if not ms:

@@ -28,7 +28,7 @@ import dataclasses
 import math
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from repro.core.batching import shared_engine
+from repro.core.batching import job_precision, shared_engine
 from repro.core.signature_index import SignatureIndex
 
 
@@ -56,14 +56,33 @@ class Grouper:
                  p_drop: float = 0.1,
                  new_job_fn: Callable[[Request], Any] = None,
                  index: Optional[SignatureIndex] = None,
-                 shortlist_k: int = 0):
+                 shortlist_k: int = 0, rescore_margin: float = 0.0):
         self.eps_t = eps_t
         self.delta_loc = delta_loc
         self.p_drop = p_drop
         self.new_job_fn = new_job_fn
         self.index = index               # fleet signature/metadata arrays
         self.shortlist_k = shortlist_k   # 0 = evaluate every passing job
+        # fp32-screen/rescore discipline for reduced-precision fleets
+        # (docs/scheduling.md): a bf16 job whose screened accuracy
+        # lands within `rescore_margin` of a join/evict threshold is
+        # re-scored once in fp32 and the decision uses the fp32 value.
+        # 0.0 (default) + all-fp32 fleet = the seed decision path.
+        self.rescore_margin = float(rescore_margin)
         self.events: List[dict] = []     # grouping decisions (for Fig. 9)
+
+    def _rescore(self, job, samples, screened: float,
+                 threshold: float) -> float:
+        """fp32 rescore of a near-threshold reduced-precision screen;
+        passthrough for fp32 jobs, wide margins, or duck-typed jobs
+        whose eval_on has no precision knob."""
+        if (self.rescore_margin <= 0.0 or job_precision(job) == "fp32"
+                or abs(screened - threshold) > self.rescore_margin):
+            return screened
+        try:
+            return float(job.eval_on(samples, precision="fp32"))
+        except TypeError:
+            return screened
 
     # -- candidate selection --------------------------------------------------
     def _python_candidates(self, jobs: List, req: Request) -> List[int]:
@@ -113,6 +132,8 @@ class Grouper:
             else:
                 accs = [cj.eval_on(req.subsamples) for cj in cjobs]
             for idx, acc_j in zip(cand_idx, accs):   # ascending: ties
+                acc_j = self._rescore(jobs[idx], req.subsamples,
+                                      acc_j, req.acc)
                 if acc_j >= req.acc:   # resolve to the oldest passing job
                     candidates[idx] = acc_j
         if candidates:
@@ -159,6 +180,11 @@ class Grouper:
                 acc_n = (cached[key] if key in cached
                          else job.eval_on(r.subsamples))
                 if r.acc_prev is not None and r.acc_prev > 0:
+                    # evict threshold in accuracy units:
+                    # acc_n < acc_prev * (1 - p_drop)
+                    acc_n = self._rescore(
+                        job, r.subsamples, acc_n,
+                        r.acc_prev * (1.0 - self.p_drop))
                     rel = (acc_n - r.acc_prev) / r.acc_prev
                     if rel < -self.p_drop:       # second drift detected
                         job.remove_member(r.stream_id)

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.batching import job_precision
 from repro.core.grouping import Request
 from repro.models.model import Model, build_model
 from repro.train.train_step import (init_state, make_train_step,
@@ -67,6 +68,14 @@ class _JobCounter:
 
 
 _job_counter = _JobCounter()
+
+# decision-plane precision policy (docs/scheduling.md): eval/screen
+# dtype per job. Training compute is governed separately by
+# TrainConfig.compute_dtype (bf16 compute leaves over fp32 master rows
+# for every job); the per-job `precision` selects which dtype SCORES
+# the job in the decision plane.
+PRECISIONS = ("fp32", "bf16")
+_PRECISION_DTYPE = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
 
 
 def _pad_size(n: int, floor: int = 4) -> int:
@@ -304,6 +313,12 @@ class JobBank:
         self._dead: List[_Slot] = []
         self._host_ok = np.zeros(self._cap, bool)
         self._dev_ok = np.zeros(self._cap, bool)
+        # params-content version: bumped by every write/scatter/move so
+        # the cached compute-precision stack (params_stack_compute)
+        # knows when its cast is stale — ONE cast per flush, not one
+        # per eval call
+        self._version = 0
+        self._compute_cache: Optional[Tuple[tuple, object]] = None
         self.stats = TransferStats()
         self.state_row_nbytes = 0    # one slot's full train-state
         self.params_row_nbytes = 0   # one slot's params subtree
@@ -364,6 +379,7 @@ class JobBank:
         through `write` (host mirror + dirty mark); the next batched
         entry point flushes the fleet in one scatter."""
         self._dev_ok[:] = False
+        self._version += 1
         if self._dev is not None:
             self._dev = jax.tree.map(lambda x: jnp.zeros_like(x),
                                      self._dev)
@@ -423,6 +439,7 @@ class JobBank:
         self._dev_ok = np.concatenate(
             [self._dev_ok, np.zeros(pad, bool)])
         self._cap = new_cap
+        self._version += 1      # leaf shapes changed under the cache
 
     def _state_leaves(self, state) -> List:
         leaves, treedef = jax.tree.flatten(state)
@@ -472,6 +489,8 @@ class JobBank:
         original row indices, because the batched kernel's gathers all
         read the pre-update stack. Only called at deterministic safe
         points."""
+        if self._dead:
+            self._version += 1      # row moves remap slot -> contents
         dev_moves: Dict[int, int] = {}     # dst row -> ORIGINAL src row
         src_of: Dict[int, int] = {}        # current row -> original row
         while self._dead:
@@ -606,6 +625,7 @@ class JobBank:
             dst[idx] = np.asarray(src)
         self._host_ok[idx] = True
         self._dev_ok[idx] = False
+        self._version += 1
 
     # -- device-side row access (scalar fallback) ---------------------------
     def row_device(self, idx: int):
@@ -632,6 +652,7 @@ class JobBank:
         self._enforce_sharding()
         self._dev_ok[idx] = True
         self._host_ok[idx] = False
+        self._version += 1
 
     # -- batched access (vmapped executables) -------------------------------
     def gather(self, idxs: Sequence[int]):
@@ -662,11 +683,13 @@ class JobBank:
             self._enforce_sharding()
             self._dev_ok[sel] = True
             self._host_ok[sel] = False
+            self._version += 1
             return
         for dst, src in zip(jax.tree.leaves(self._host),
                             self._state_leaves(states)):
             dst[sel] = np.asarray(src)
         self.stats.d2h(int(sel.size) * self.state_row_nbytes)
+        self._version += 1
 
     def snapshot_params(self, idx: int):
         """COMMITTED, independent device copy of slot `idx`'s params
@@ -697,6 +720,34 @@ class JobBank:
             self.sync_to_device()
             return self._dev["params"]
         return self._host["params"]
+
+    def params_stack_compute(self, dtype):
+        """The stacked params CAST to compute dtype `dtype` — the
+        precision policy's "one cast at flush" contract
+        (docs/scheduling.md): fp32 master rows stay the authoritative
+        stack; the bf16 compute stack is cast ONCE per bank version
+        (writes/scatters/compaction bump `_version`) and cached, so a
+        window's many bf16 eval calls share one cast instead of
+        re-casting per call. fp32 requests return the master stack
+        itself (borrowed, same as params_stack); other dtypes return
+        INDEPENDENT buffers safe to hold until the next bank
+        mutation."""
+        dt = jnp.dtype(dtype)
+        if dt == jnp.dtype(jnp.float32):
+            return self.params_stack()
+        base = self.params_stack()
+        if base is None:
+            return None
+        key = (str(dt), self._version, self.resident)
+        if self._compute_cache is not None \
+                and self._compute_cache[0] == key:
+            return self._compute_cache[1]
+        stack = jax.tree.map(
+            lambda x: x.astype(dt)
+            if jnp.issubdtype(np.asarray(x).dtype, np.floating) else x,
+            base)
+        self._compute_cache = (key, stack)
+        return stack
 
 
 class SharedEngine:
@@ -737,6 +788,9 @@ class SharedEngine:
             pred = jnp.argmax(logits[:, :-1].astype(jnp.float32), axis=-1)
             return jnp.mean((pred == toks[:, 1:]).astype(jnp.float32))
         self._acc = jax.jit(_acc)
+        # per-precision scalar eval executables; "fp32" aliases the
+        # seed _acc above so the default path's trace is untouched
+        self._acc_prec: Dict[str, Callable] = {"fp32": self._acc}
 
         self.batched = bool(batched)
         self.eval_chunk = int(eval_chunk)
@@ -749,8 +803,8 @@ class SharedEngine:
 
         # flattened fleet eval: a job's members ride the EXAMPLE axis of
         # one forward (params read once per job, GEMMs see M*B rows);
-        # one jitted executable per member-batch size B
-        self._acc_flat: Dict[int, Callable] = {}
+        # one jitted executable per (member-batch size B, precision)
+        self._acc_flat: Dict[Tuple[int, str], Callable] = {}
         self._train_many: Dict[int, Callable] = {}
 
     def fresh_state(self, seed: int = 0):
@@ -762,31 +816,65 @@ class SharedEngine:
             state, m = self._train(state, b)
         return state, m
 
-    def accuracy(self, params, tokens) -> float:
-        """Top-1 next-token accuracy — the mAP analogue."""
-        return float(self._acc(params, jnp.asarray(tokens)))
+    def accuracy(self, params, tokens, *, precision: str = "fp32") -> float:
+        """Top-1 next-token accuracy — the mAP analogue. `precision`
+        picks the decision-plane eval dtype (docs/scheduling.md);
+        "fp32" is the seed executable, bit-identical to before."""
+        return float(self._acc_fn(precision)(params, jnp.asarray(tokens)))
 
     # -- batched eval plane -------------------------------------------------
-    def _acc_flat_fn(self, b: int) -> Callable:
+    def _acc_fn(self, precision: str) -> Callable:
+        fn = self._acc_prec.get(precision)
+        if fn is None:
+            cd = _PRECISION_DTYPE[precision]
+
+            def _acc(params, toks):
+                # screen-precision eval: params cast to the compute
+                # dtype (a no-op when the caller passes the bank's
+                # cast-at-flush compute stack) so weights x activations
+                # stay in `cd` end to end; argmax/mean stay fp32
+                params = jax.tree.map(
+                    lambda x: x.astype(cd)
+                    if jnp.issubdtype(x.dtype, jnp.floating) else x,
+                    params)
+                logits, _ = self.model.apply(params, toks,
+                                             compute_dtype=cd)
+                pred = jnp.argmax(logits[:, :-1].astype(jnp.float32),
+                                  axis=-1)
+                return jnp.mean((pred == toks[:, 1:]).astype(jnp.float32))
+            fn = jax.jit(_acc)
+            self._acc_prec[precision] = fn
+        return fn
+
+    def _acc_flat_fn(self, b: int, precision: str = "fp32") -> Callable:
         """Jitted flat eval for member-batch size `b`: takes (M*b, S)
         token rows + one job's params, returns (M,) per-member
         accuracies — each member's logits/argmax/mean identical to its
-        own scalar `_acc` call (rows of a batch are independent)."""
-        fn = self._acc_flat.get(b)
+        own scalar `_acc` call (rows of a batch are independent). One
+        executable per (b, precision); "fp32" keeps the seed trace."""
+        fn = self._acc_flat.get((b, precision))
         if fn is None:
+            cd = _PRECISION_DTYPE[precision]
+
             def flat(params, toks):
+                if cd != jnp.float32:
+                    params = jax.tree.map(
+                        lambda x: x.astype(cd)
+                        if jnp.issubdtype(x.dtype, jnp.floating) else x,
+                        params)
                 logits, _ = self.model.apply(params, toks,
-                                             compute_dtype=jnp.float32)
+                                             compute_dtype=cd)
                 pred = jnp.argmax(logits[:, :-1].astype(jnp.float32),
                                   axis=-1)
                 ok = (pred == toks[:, 1:]).astype(jnp.float32)
                 return jnp.mean(ok.reshape(toks.shape[0] // b, b, -1),
                                 axis=(1, 2))
             fn = jax.jit(flat)
-            self._acc_flat[b] = fn
+            self._acc_flat[(b, precision)] = fn
         return fn
 
-    def batched_accuracy(self, params_stack, tokens, job_ids) -> np.ndarray:
+    def batched_accuracy(self, params_stack, tokens, job_ids, *,
+                         precision: str = "fp32") -> np.ndarray:
         """Score every (tokens[i], params_stack[job_ids[i]]) pair of the
         fleet, bit-identical to calling `accuracy` per pair.
 
@@ -813,7 +901,7 @@ class SharedEngine:
         for i, j in enumerate(ids):
             groups.setdefault(int(j), []).append(i)
         m_chunk = max(1, self.eval_chunk // b)     # members per flat call
-        fn = self._acc_flat_fn(b)
+        fn = self._acc_flat_fn(b, precision)
         # a resident stack is sliced per job ON DEVICE (zero transfer);
         # host leaves pay one params-row h2d per job
         host_stack = any(isinstance(x, np.ndarray)
@@ -846,17 +934,19 @@ class SharedEngine:
         return (self.batched and len(self.bank) > 0
                 and all(self._bank_slot(j) is not None for j in jobs))
 
-    def _eval_slot(self, idx, samples) -> float:
+    def _eval_slot(self, idx, samples, *, precision: str = "fp32") -> float:
         """Scalar eval of one bank slot. Resident mode slices the job's
         params on device (dynamic row read of the resident stack, zero
         host transfer); the host-resident bank copies the row out and
-        pays the implicit params h2d at dispatch."""
+        pays the implicit params h2d at dispatch. Non-fp32 precisions
+        cast the row inside the jitted eval (the scalar fallback does
+        not go through the bank's cast-at-flush compute stack)."""
         if self.bank.resident:
-            return float(self._acc(self.bank.params_row_device(idx),
-                                   jnp.asarray(samples)))
+            return float(self._acc_fn(precision)(
+                self.bank.params_row_device(idx), jnp.asarray(samples)))
         params = self.bank.read_params(idx)
         self.bank.stats.h2d(self.bank.params_row_nbytes)
-        return self.accuracy(params, samples)
+        return self.accuracy(params, samples, precision=precision)
 
     def eval_pairs(self, pairs) -> List[float]:
         """pairs: [(job, samples)]. Returns per-pair accuracies,
@@ -869,14 +959,27 @@ class SharedEngine:
             return [job.eval_on(s) for job, s in pairs]
         out: List[float] = [0.0] * len(pairs)
         arrs = [np.asarray(s) for _, s in pairs]
-        by_shape: Dict[tuple, List[int]] = {}
+        # pairs group by (shape, decision precision): every job of an
+        # all-fp32 fleet lands in the same groups in the same order as
+        # the seed's shape-only keying (bit-identity contract); a mixed
+        # fleet dispatches one batched call per precision per shape,
+        # bf16 jobs scored against the bank's cast-at-flush compute
+        # stack
+        by_key: Dict[tuple, List[int]] = {}
         for i, a in enumerate(arrs):
-            by_shape.setdefault(a.shape, []).append(i)
-        stack = self.bank.params_stack()
-        for idxs in by_shape.values():
+            by_key.setdefault((a.shape, job_precision(pairs[i][0])),
+                              []).append(i)
+        stacks = {"fp32": self.bank.params_stack()}
+        for (_shape, prec), idxs in by_key.items():
+            stack = stacks.get(prec)
+            if stack is None:
+                stack = self.bank.params_stack_compute(
+                    _PRECISION_DTYPE[prec])
+                stacks[prec] = stack
             toks = np.stack([arrs[i] for i in idxs])
             jids = np.array([pairs[i][0]._slot.idx for i in idxs])
-            for i, a in zip(idxs, self.batched_accuracy(stack, toks, jids)):
+            for i, a in zip(idxs, self.batched_accuracy(
+                    stack, toks, jids, precision=prec)):
                 out[i] = float(a)
         return out
 
@@ -986,9 +1089,17 @@ class RetrainJob:
 
     def __init__(self, engine: SharedEngine, first: Request, *,
                  micro_steps: int = 4, batch: int = 8, seed: int = 0,
-                 init_state_tree=None, pool_rows: int = 512):
+                 init_state_tree=None, pool_rows: int = 512,
+                 precision: str = "fp32"):
+        if precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}; got {precision!r}")
         self.job_id = f"job{next(_job_counter)}"
         self.engine = engine
+        # decision-plane screen precision (docs/scheduling.md): bf16
+        # jobs eval against the bank's compute stack; near-threshold
+        # grouping decisions and the serve gate rescore in fp32
+        self.precision = precision
         self.members: List[Request] = []
         self.pool = TokenRingPool(pool_rows)
         self.micro_steps = micro_steps
@@ -1065,8 +1176,13 @@ class RetrainJob:
         member (seed semantics, pinned by the golden traces)."""
         self.pool.purge(stream_id)
 
-    def eval_on(self, samples) -> float:
-        return self.engine._eval_slot(self._slot.idx, samples)
+    def eval_on(self, samples, precision: Optional[str] = None) -> float:
+        """Accuracy on `samples`, scored at the job's own decision
+        precision by default; pass precision="fp32" for the
+        near-threshold rescore (Grouper.rescore_margin, serve gate)."""
+        return self.engine._eval_slot(
+            self._slot.idx, samples,
+            precision=self.precision if precision is None else precision)
 
     # -- allocator interface ---------------------------------------------------
     def eval(self) -> float:

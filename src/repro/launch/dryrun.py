@@ -192,14 +192,12 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    ca = compiled.cost_analysis() or {}
     ma = compiled.memory_analysis()
-    hlo = compiled.as_text()
-    base_cost = {"flops": float(ca.get("flops", 0.0)),
-                 "bytes": float(ca.get("bytes accessed", 0.0)),
-                 "coll": collective_bytes(hlo)}
     # scan-body correction: add (count-1) x per-segment layer cost
     from repro.launch import roofline as RL
+    # _cost_dict normalizes the list-of-dicts cost_analysis() newer jax
+    # versions return for multi-program compiles
+    base_cost = RL._cost_dict(compiled, collective_bytes)
     t0 = time.time()
     total_cost, per_layer = RL.corrected_cost(
         cfg, base_cost, mesh=mesh, rules=rules,

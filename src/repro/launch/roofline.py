@@ -14,16 +14,28 @@ cost compile (q_chunk = full seq) so attention FLOPs are not undercounted
 
 Known residual undercount: the sLSTM time-step scan body (xlstm) — its
 per-step FLOPs are negligible vs the block's matmuls; noted in
-EXPERIMENTS.md.
+docs/architecture.md (§Roofline accounting).
+
+Beyond the per-cell dry-run accounting, this module also hosts the
+fleet scheduling cost model (docs/scheduling.md):
+
+  * `CostTable` — caches scan-corrected FLOP/byte costs per
+    (model-config, batch, seq, precision, kind) and converts them to
+    modeled device-seconds on a `DeviceSpec` roofline;
+  * `WindowBudget` — one retraining window's metered budget ledger;
+  * `RooflineMeter` — the controller/allocator-facing meter that prices
+    duck-typed retraining jobs (train micro-windows, eval passes,
+    serve-plane queries) against one fleet-wide budget.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import HYBRID, MOE, SSM, ModelConfig
+from repro.configs.base import HYBRID, MOE, SSM, ModelConfig, TrainConfig
 from repro.models import transformer as T
 from repro.models import param as P
 from repro.models import xlstm as xlstm_lib
@@ -42,6 +54,10 @@ def _layer_spec(cfg: ModelConfig, seg: Segment, ep: int, tp: int = 1):
 
 def _cost_dict(compiled, collective_fn):
     ca = compiled.cost_analysis() or {}
+    # some jax versions return one properties dict per device program
+    # instead of a plain dict; single-program compiles get a 1-list
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = collective_fn(hlo)
     return {"flops": float(ca.get("flops", 0.0)),
@@ -60,26 +76,33 @@ def _add(a, b, k=1):
 def segment_layer_cost(cfg: ModelConfig, seg: Segment, *, mesh, rules,
                        batch: int, seq: int, kind: str, moe_impl: str,
                        remat: str, collective_fn, capacity_factor=1.25,
-                       cache_slice=None, ssm_impl: str = "gspmd"):
+                       cache_slice=None, ssm_impl: str = "gspmd",
+                       compute_dtype=None):
     """Compile one layer of `seg` and return its cost dict.
 
     kind: "train" (fwd+bwd via vjp, checkpoint-wrapped) | "prefill" (fwd)
           | "decode" (single-token step against a cache slice).
+
+    compute_dtype=None keeps the dry-run convention (fp32 weights,
+    bf16 activations); the CostTable passes an explicit dtype so the
+    layer compile matches the full-model compile it corrects.
     """
     from jax.sharding import NamedSharding
 
+    x_dtype = compute_dtype or jnp.bfloat16
+    p_dtype = compute_dtype or jnp.float32
     ep = mesh.shape.get("model", 1)
     tp = ep if (rules or {}).get("heads") else 1
     spec = _layer_spec(cfg, seg, ep, tp)
-    lp = P.abstract_params(spec, mesh, rules, jnp.float32)
+    lp = P.abstract_params(spec, mesh, rules, p_dtype)
     ctx = ShardCtx(mesh, rules)
     bspec = P.logical_to_pspec(("batch", None, None), rules)
     S_tot = seq + (cfg.meta_tokens if seg.kind == "block" else 0)
-    x_s = jax.ShapeDtypeStruct((batch, S_tot, cfg.d_model), jnp.bfloat16,
+    x_s = jax.ShapeDtypeStruct((batch, S_tot, cfg.d_model), x_dtype,
                                sharding=NamedSharding(mesh, bspec))
 
     if kind == "decode":
-        x1 = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.bfloat16,
+        x1 = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), x_dtype,
                                   sharding=NamedSharding(mesh, bspec))
         cache_abs = cache_slice
 
@@ -136,7 +159,7 @@ def segment_layer_cost(cfg: ModelConfig, seg: Segment, *, mesh, rules,
 def corrected_cost(cfg: ModelConfig, base_cost: dict, *, mesh, rules,
                    batch: int, seq: int, kind: str, moe_impl: str,
                    remat: str, collective_fn, capacity_factor=1.25,
-                   ssm_impl: str = "gspmd"):
+                   ssm_impl: str = "gspmd", compute_dtype=None):
     """base_cost: cost dict of the full scanned model (bodies counted x1).
     Adds (count-1) x per-layer cost for every segment. Returns
     (total_cost, per_layer_costs)."""
@@ -159,9 +182,279 @@ def corrected_cost(cfg: ModelConfig, base_cost: dict, *, mesh, rules,
             cfg, seg, mesh=mesh, rules=rules, batch=batch, seq=seq,
             kind=kind, moe_impl=moe_impl, remat=remat,
             collective_fn=collective_fn, capacity_factor=capacity_factor,
-            cache_slice=cache_slice, ssm_impl=ssm_impl)
+            cache_slice=cache_slice, ssm_impl=ssm_impl,
+            compute_dtype=compute_dtype)
         per_layer.append({"kind": seg.kind, "window": seg.window,
                           "count": seg.count, **lc})
         if seg.count > 1:
             total = _add(total, lc, seg.count - 1)
     return total, per_layer
+
+
+# ---------------------------------------------------------------------------
+# Fleet scheduling cost model (docs/scheduling.md)
+# ---------------------------------------------------------------------------
+PRECISIONS = ("fp32", "bf16")
+
+_PRECISION_DTYPE = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def precision_dtype(precision: str):
+    """jnp dtype for a job precision policy string."""
+    try:
+        return _PRECISION_DTYPE[precision]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {precision!r}; known: {PRECISIONS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cost:
+    """Scan-corrected FLOP/byte cost of one pass (one train step, one
+    eval forward, one prefill, or one decode step)."""
+    flops: float
+    bytes: float
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """Per-precision roofline of one accelerator. Defaults match the
+    TPU v5e numbers repro.launch.dryrun budgets against; fp32 runs at
+    half the bf16 systolic peak, which is what makes a bf16 precision
+    policy genuinely cheaper in the meter, not just a label."""
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12
+    peak_flops_fp32: float = 98.5e12
+    hbm_bw: float = 819e9
+
+    def peak(self, precision: str) -> float:
+        precision_dtype(precision)      # validate
+        return (self.peak_flops_bf16 if precision == "bf16"
+                else self.peak_flops_fp32)
+
+    def seconds(self, cost: Cost, precision: str = "fp32") -> float:
+        """Modeled device-seconds: max of the compute and HBM terms."""
+        return max(cost.flops / self.peak(precision),
+                   cost.bytes / self.hbm_bw)
+
+
+class CostTable:
+    """Cached scan-corrected costs per (model-config, batch, seq,
+    precision, kind in {train, eval, prefill, decode}).
+
+    Compiles are meshless (single-device abstract lowering — the fleet
+    engines carry no mesh requirement) and happen once per key; every
+    later lookup is a dict hit, so metering a window adds no compile
+    work to the hot path. "eval" is a full forward with logits (the
+    SharedEngine accuracy pass); "train" is one optimizer-free
+    fwd+bwd step through the same loss the training plane uses.
+    """
+
+    def __init__(self, device: Optional[DeviceSpec] = None):
+        self.device = device or DeviceSpec()
+        self._cache: Dict[tuple, Cost] = {}
+        self._models: Dict[ModelConfig, object] = {}
+        self._mesh = None
+
+    # -- compile plumbing ---------------------------------------------------
+    def _model(self, cfg: ModelConfig):
+        m = self._models.get(cfg)
+        if m is None:
+            from repro.models.model import build_model
+            m = build_model(cfg)
+            self._models[cfg] = m
+        return m
+
+    def _one_device_mesh(self):
+        """1-device mesh for the per-layer correction compiles (the
+        segment_layer_cost API shards; one device means replicated —
+        identical math, zero placement effect)."""
+        if self._mesh is None:
+            import numpy as np
+            from jax.sharding import Mesh
+            self._mesh = Mesh(np.asarray(jax.devices()[:1]), ("model",))
+        return self._mesh
+
+    @staticmethod
+    def _abstract(tree, dtype):
+        return P.tree_map_specs(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree)
+
+    def _base_compiled(self, cfg: ModelConfig, batch: int, seq: int,
+                       kind: str, cd):
+        model = self._model(cfg)
+        params = self._abstract(model.spec, jnp.float32)   # master rows
+        toks = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        if kind == "eval":
+            def fwd(p, t):
+                return model.apply(p, t, compute_dtype=cd)[0]
+            return jax.jit(fwd).lower(params, toks).compile()
+        if kind == "prefill":
+            cap = seq + cfg.meta_tokens
+
+            def pre(p, t):
+                return model.prefill(p, t, cap, compute_dtype=cd)
+            return jax.jit(pre).lower(params, toks).compile()
+        if kind == "train":
+            tcfg = TrainConfig(remat="none",
+                               compute_dtype=str(jnp.dtype(cd)))
+            from repro.train.train_step import make_loss_fn
+            loss_fn = make_loss_fn(model, tcfg)
+
+            def train_one(p, t):
+                batch_d = {"inputs": t, "labels": t}
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(p, batch_d)
+                return loss, grads
+            return jax.jit(train_one).lower(params, toks).compile()
+        if kind == "decode":
+            cap = seq + cfg.meta_tokens
+            cache = self._abstract(model.cache_spec(batch, cap),
+                                   jnp.bfloat16)
+            tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def dec(p, t, c, q):
+                return model.decode(p, t, c, q, compute_dtype=cd)
+            return jax.jit(dec).lower(params, tok, cache, pos).compile()
+        raise ValueError(
+            f"unknown kind {kind!r}; expected train/eval/prefill/decode")
+
+    # -- public API ---------------------------------------------------------
+    def cost(self, cfg: ModelConfig, *, batch: int, seq: int, kind: str,
+             precision: str = "fp32") -> Cost:
+        """Scan-corrected FLOP/byte cost of one `kind` pass."""
+        key = (cfg, int(batch), int(seq), kind, precision)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        cd = precision_dtype(precision)
+        compiled = self._base_compiled(cfg, batch, seq, kind, cd)
+        base = _cost_dict(compiled, lambda hlo: {})
+        total, _ = corrected_cost(
+            cfg, base, mesh=self._one_device_mesh(), rules={},
+            batch=batch, seq=seq,
+            kind=("prefill" if kind == "eval" else kind),
+            moe_impl="dense", remat="none",
+            collective_fn=lambda hlo: {}, compute_dtype=cd)
+        out = Cost(flops=total["flops"], bytes=total["bytes"])
+        self._cache[key] = out
+        return out
+
+    def seconds(self, cfg: ModelConfig, *, batch: int, seq: int, kind: str,
+                precision: str = "fp32") -> float:
+        """Modeled device-seconds of one `kind` pass on the roofline."""
+        return self.device.seconds(
+            self.cost(cfg, batch=batch, seq=seq, kind=kind,
+                      precision=precision), precision)
+
+
+@dataclasses.dataclass
+class WindowBudget:
+    """One retraining window's metered budget ledger (modeled
+    device-seconds). Charges are tagged by kind so the window report
+    shows where the budget went (train vs eval vs serve)."""
+    total: float
+    spent: float = 0.0
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def remaining(self) -> float:
+        return self.total - self.spent
+
+    def can_afford(self, seconds: float) -> bool:
+        return self.spent + seconds <= self.total * (1 + 1e-9)
+
+    def charge(self, seconds: float, kind: str = "train"):
+        self.spent += seconds
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + seconds
+
+    def report(self) -> Dict:
+        return {"total": self.total, "spent": self.spent,
+                "remaining": self.remaining, "by_kind": dict(self.by_kind)}
+
+
+class RooflineMeter:
+    """Prices duck-typed retraining jobs against one window budget.
+
+    A job is priced from its own engine's ModelConfig, its own batch /
+    micro_steps, and its own precision policy (`job.precision`,
+    default fp32) — a heterogeneous fleet meters heterogeneously,
+    which is what lets Alg. 1's gain/cost objective prefer a smaller
+    backbone or a cheaper precision under budget pressure. Jobs
+    without a real engine (scripted test fakes) fall back to
+    `fallback_cost` seconds per micro-window so the allocator stays
+    duck-typed.
+    """
+
+    def __init__(self, table: CostTable, budget_seconds: float, *,
+                 seq_len: int = 32, eval_batch: int = 16,
+                 fallback_cost: float = 1.0):
+        self.table = table
+        self.budget = WindowBudget(total=float(budget_seconds))
+        self.seq_len = int(seq_len)
+        self.eval_batch = int(eval_batch)
+        self.fallback_cost = float(fallback_cost)
+
+    # -- job pricing --------------------------------------------------------
+    @staticmethod
+    def job_precision(job) -> str:
+        return getattr(job, "precision", "fp32") or "fp32"
+
+    def _job_cfg(self, job) -> Optional[ModelConfig]:
+        cfg = getattr(getattr(job, "engine", None), "cfg", None)
+        return cfg if isinstance(cfg, ModelConfig) else None
+
+    def train_cost(self, job) -> float:
+        """One micro-window: `micro_steps` train steps at the job's
+        train batch, engine config, and precision."""
+        cfg = self._job_cfg(job)
+        if cfg is None:
+            return self.fallback_cost
+        steps = int(getattr(job, "micro_steps", 1) or 1)
+        return steps * self.table.seconds(
+            cfg, batch=int(getattr(job, "batch", 8) or 8),
+            seq=self.seq_len, kind="train",
+            precision=self.job_precision(job))
+
+    def eval_cost(self, job) -> float:
+        """One allocator eval(): one accuracy pass per member at the
+        controller eval batch."""
+        cfg = self._job_cfg(job)
+        if cfg is None:
+            return 0.0
+        members = max(1, int(getattr(job, "num_members", 1) or 1))
+        return members * self.table.seconds(
+            cfg, batch=self.eval_batch, seq=self.seq_len, kind="eval",
+            precision=self.job_precision(job))
+
+    def micro_cost(self, job) -> float:
+        """One allocator micro-window: eval before, train, eval after
+        (the measured AccGain bracket of Alg. 1)."""
+        return self.train_cost(job) + 2 * self.eval_cost(job)
+
+    def serve_cost(self, cfg: ModelConfig, *, queries: int,
+                   prompt_len: int, gen_tokens: int,
+                   batch: int = 1) -> float:
+        """Serve-plane pricing: one prefill per query plus `gen_tokens`
+        decode steps (gate evals are charged separately as evals)."""
+        if queries <= 0:
+            return 0.0
+        pre = self.table.seconds(cfg, batch=batch, seq=prompt_len,
+                                 kind="prefill", precision="fp32")
+        dec = self.table.seconds(cfg, batch=batch, seq=prompt_len,
+                                 kind="decode", precision="fp32")
+        return queries * (pre + max(0, gen_tokens) * dec)
+
+    # -- ledger passthrough -------------------------------------------------
+    def can_afford(self, seconds: float) -> bool:
+        return self.budget.can_afford(seconds)
+
+    def charge(self, seconds: float, kind: str = "train"):
+        self.budget.charge(seconds, kind)
+
+    def report(self) -> Dict:
+        return self.budget.report()

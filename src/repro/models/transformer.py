@@ -8,6 +8,7 @@ mLSTM/sLSTM alternation) become short segment lists.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import List, Optional
@@ -291,6 +292,30 @@ def _block_decode(cfg: ModelConfig, p, x, cache, pos, ctx, *, window: int,
 # ---------------------------------------------------------------------------
 # Segment runners
 # ---------------------------------------------------------------------------
+# When True, segment scans compile fully unrolled (every layer its own
+# HLO) instead of as a while loop. Math-identical; only the schedule
+# differs. The roofline cost model's parity test uses this to compare
+# its scan-body-corrected totals against a direct cost_analysis of the
+# unrolled graph (XLA counts loop bodies once, unrolled layers N times).
+_SCAN_UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    """Compile segment layer scans unrolled within this context."""
+    global _SCAN_UNROLL
+    prev = _SCAN_UNROLL
+    _SCAN_UNROLL = True
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL = prev
+
+
+def _scan_unroll():
+    return True if _SCAN_UNROLL else 1
+
+
 def _remat_wrap(body, remat: str):
     if remat == "none":
         return body
@@ -331,7 +356,8 @@ def _segment_forward(cfg, seg: Segment, params, x, positions, ctx, *,
         raise ValueError(seg.kind)
 
     (x, aux), caches = jax.lax.scan(_remat_wrap(body, remat),
-                                    (x, jnp.zeros((), jnp.float32)), params)
+                                    (x, jnp.zeros((), jnp.float32)), params,
+                                    unroll=_scan_unroll())
     return x, aux, caches
 
 
