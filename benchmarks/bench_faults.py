@@ -1,18 +1,26 @@
 """Fault-tolerance drill: checkpoint save/restore latency + fidelity,
 mid-training failure recovery, elastic window checkpoint/restore cost,
-and straggler quota renormalization — the operational half of "runs on
-thousands of nodes".
+straggler quota renormalization — and the hostile-scenario sweep: the
+four adversarial workloads from repro.data.scenarios run end to end
+with the window invariants (repro.testing.invariants) ENABLED, a
+10k-join registry stress, and a sensor blackout composed with a
+mid-window device loss (FleetElastic) in a 2-device subprocess.
+
+`--smoke` (or SMOKE=1) runs the hostile sweep at golden scale for CI;
+the full run uses larger fleets and adds the 10k-join stress.
 
 Results go to stdout as CSV rows AND to BENCH_faults.json so the
 recovery-cost trajectory is machine-readable across PRs; CI's
-bench-smoke job uploads it.
+bench-smoke and adversarial-smoke jobs upload it.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
+import subprocess
+import sys
 import tempfile
+import textwrap
 import time
 
 import jax
@@ -21,18 +29,32 @@ import numpy as np
 
 from benchmarks.common import Rows, make_engine
 from repro.core.grouping import Request
+from repro.core.rows import RowRegistry
 from repro.core.trainer import RetrainJob
+from repro.data.scenarios import HOSTILE_SCENARIOS, build_scenario
 from repro.data.streams import DomainBank
 from repro.distributed import checkpoint as ckpt
 from repro.distributed.elastic import FleetElastic
 from repro.distributed.stragglers import StragglerPolicy
+from repro.testing.trace import (HOSTILE_GOLDEN, hostile_controller_kwargs,
+                                 run_scenario)
 
 OUT_JSON = "BENCH_faults.json"
 
+# full-mode hostile fleets: bigger than the goldens, still CPU-sized.
+# flash_crowd's registry/bank growth at the real 10k is covered by
+# _registry_stress below — a 10k-joiner *training* run is not a CPU job.
+_FULL_HOSTILE = {
+    "flash_crowd_10k": dict(seed=0, joiners=48, base_regions=2,
+                            streams_per_region=2, join_window=1,
+                            windows=5),
+    "sensor_blackout": dict(seed=0),
+    "oscillating_drift": dict(seed=0),
+    "bandwidth_collapse": dict(seed=0),
+}
 
-def run():
-    rows = Rows("faults")
-    engine = make_engine()
+
+def _checkpoint_drills(rows: Rows, engine):
     bank = DomainBank(64, 4, dim=4, seed=0)
     rng = np.random.default_rng(0)
     toks = bank.sample(0, rng, 8, 32)
@@ -93,6 +115,8 @@ def run():
         rows.add("elastic_restore_exact",
                  int(abs(acc_before - acc_el) < 1e-6))
 
+
+def _straggler_drill(rows: Rows):
     # straggler mitigation: wall time per micro-window stays bounded
     pol = StragglerPolicy(threshold=2.0)
     rngs = np.random.default_rng(1)
@@ -109,15 +133,146 @@ def run():
     rows.add("straggler_wall_reduction",
              wall_naive / max(wall_mitigated, 1e-9))
     rows.add("straggler_flagged", int(pol.is_straggler("slow")))
+
+
+def _hostile_sweep(rows: Rows, engine, *, smoke: bool):
+    """The four adversarial scenarios end to end, invariants ON
+    (run_scenario's default): every window is checked against the
+    bandwidth/share/grouping/residency laws, so a row here certifies
+    the hostile regime ran clean — not just that it ran."""
+    for name in HOSTILE_SCENARIOS:
+        spec = (HOSTILE_GOLDEN[name]["scenario"] if smoke
+                else _FULL_HOSTILE[name])
+        for fw in ("ecco", "naive"):
+            sc = build_scenario(name, **spec)
+            ctl = run_scenario(fw, sc, engine=engine,
+                               **hostile_controller_kwargs(name))
+            rows.add(f"{name}_{fw}_acc", ctl.mean_accuracy(last_k=2))
+            rows.add(f"{name}_{fw}_jobs", len(ctl.jobs))
+            rows.add(f"{name}_{fw}_invariant_windows",
+                     getattr(ctl, "invariant_windows", 0))
+
+
+def _registry_stress(rows: Rows, n: int = 10_000):
+    """flash_crowd_10k's control-plane growth path at full scale: 10k
+    dense-row joins, then a half-fleet eviction storm, without the
+    training loop in the way. The registry must stay a dense prefix
+    throughout — the contract every batched plane kernels against."""
+    reg = RowRegistry(capacity=2)
+    t0 = time.perf_counter()
+    for i in range(n):
+        reg.add(f"crowd{i}")
+    rows.add("registry_10k_join_ms", (time.perf_counter() - t0) * 1e3)
+    t0 = time.perf_counter()
+    for i in range(0, n, 2):
+        reg.remove(f"crowd{i}")
+    rows.add("registry_10k_evict_half_ms",
+             (time.perf_counter() - t0) * 1e3)
+    dense = sorted(reg[r] for r in reg.ids) == list(range(len(reg)))
+    rows.add("registry_10k_dense_after_churn", int(dense))
+    rows.add("registry_10k_survivors", len(reg))
+
+
+# sensor blackout composed with a device failure: the doomed region's
+# streams leave at the window boundary AND the elastic runtime loses a
+# device mid-window, so the retry re-runs the shrunken fleet on the
+# shrunken mesh — with the invariant checker watching every window.
+# Device count is fixed at jax import, hence the subprocess.
+_BLACKOUT_ELASTIC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import dataclasses, json, tempfile
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.core.baselines import FRAMEWORKS
+    from repro.core.controller import ControllerConfig
+    from repro.core.trainer import SharedEngine
+    from repro.data.scenarios import build_scenario
+    from repro.distributed.elastic import FleetElastic
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.testing.invariants import InvariantChecker
+
+    assert jax.device_count() == 2, jax.devices()
+    spec = json.loads(os.environ["BLACKOUT_SPEC"])
+    sc = build_scenario("sensor_blackout", **spec["scenario"])
+    engine = SharedEngine(dataclasses.replace(
+        smoke_config("olmo-1b"), vocab_size=sc.bank.vocab))
+    kw = dict(window_seconds=sc.window_seconds,
+              shared_bandwidth=sc.shared_bandwidth,
+              local_caps=sc.local_caps)
+    kw.update(spec["controller"])
+    cc = ControllerConfig(**kw)
+    with tempfile.TemporaryDirectory() as d:
+        el = FleetElastic(d, mesh=make_fleet_mesh(2))
+        ctl = FRAMEWORKS["ecco"](engine, list(sc.streams), cc, seed=0,
+                                 elastic=el)
+        ctl.warmup()
+        chk = InvariantChecker(label="sensor_blackout/ecco+elastic")
+        blackout = spec["scenario"]["blackout_window"]
+        for w in range(sc.windows):
+            churned = set()
+            for ev in sc.events_at(w):
+                if ev.kind == "join" and ev.stream is not None:
+                    ctl.add_stream(ev.stream)
+                    churned.add(ev.stream_id)
+                elif ev.kind == "leave":
+                    ctl.remove_stream(ev.stream_id)
+                    churned.add(ev.stream_id)
+            if w == blackout:
+                # the region dies and takes a device with it mid-window
+                el.schedule_failure(1, after_barriers=2)
+            chk.before_window(ctl, churned)
+            n_ev = len(ctl.grouper.events)
+            wm = ctl.run_window()
+            chk.after_window(ctl, wm, ctl.grouper.events[n_ev:])
+        acc = float(ctl.mean_accuracy(last_k=2))
+        print(json.dumps({
+            "windows": chk.windows_checked,
+            "devices_after": len(el.devices()),
+            "acc": None if acc != acc else acc,
+        }))
+""")
+
+
+def _blackout_elastic(rows: Rows):
+    spec = {"scenario": HOSTILE_GOLDEN["sensor_blackout"]["scenario"],
+            "controller": hostile_controller_kwargs("sensor_blackout")}
+    env = dict(os.environ, BLACKOUT_SPEC=json.dumps(spec))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable, "-c", _BLACKOUT_ELASTIC_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    rows.add("blackout_elastic_invariant_windows", out["windows"])
+    rows.add("blackout_elastic_devices_after", out["devices_after"])
+    rows.add("blackout_elastic_acc",
+             float("nan") if out["acc"] is None else out["acc"])
+    rows.add("blackout_elastic_clean", 1)
+
+
+def run(smoke: bool = False):
+    rows = Rows("faults")
+    engine = make_engine()
+    _checkpoint_drills(rows, engine)
+    _straggler_drill(rows)
+    _hostile_sweep(rows, engine, smoke=smoke)
+    if not smoke:
+        _registry_stress(rows)
+    _blackout_elastic(rows)
     metrics = {k: (None if isinstance(v, float) and not np.isfinite(v)
                    else v)
                for k, v in rows.metrics.items()}
     with open(OUT_JSON, "w") as f:
-        json.dump({"metrics": metrics}, f, indent=1, allow_nan=False)
+        json.dump({"smoke": smoke, "metrics": metrics}, f, indent=1,
+                  allow_nan=False)
         f.write("\n")
     rows.add("json_out", OUT_JSON)
     return rows.emit()
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv[1:] or bool(os.environ.get("SMOKE")))

@@ -306,7 +306,14 @@ class ECCOController:
     # -- fleet membership (camera churn) -------------------------------
     def add_stream(self, stream: Stream, *, warm: bool = True):
         """A camera joins the fleet mid-run. Its drift reference is set
-        from its first window of data (deployment-time snapshot)."""
+        from its first window of data (deployment-time snapshot).
+        Joining an id that is already live is an error: re-adding
+        would silently overwrite the stream's detector reference and
+        leave duplicate fleet rows behind every per-stream plane."""
+        if any(s.stream_id == stream.stream_id for s in self.streams):
+            raise ValueError(
+                f"stream {stream.stream_id!r} is already live; remove "
+                f"it before re-joining")
         self.streams.append(stream)
         self.fleet.add_stream(stream.stream_id)
         if warm:

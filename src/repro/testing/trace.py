@@ -19,6 +19,17 @@ group memberships, grouping events — must match EXACTLY; float fields
 tolerances, because model-training floats wobble across jax/XLA builds
 while the decisions they drive are pinned by the structural fields.
 
+Besides the benign drift_wave goldens (one per framework), the four
+HOSTILE scenarios (data.scenarios.HOSTILE_SCENARIOS) are golden-pinned
+at smoke scale under `trace_<scenario>_<framework>.json` — same
+--regen/--check flow, same comparator.
+
+`run_scenario` also drives `repro.testing.invariants.InvariantChecker`
+on every window by default (window-level laws: bandwidth caps, share
+proportionality, grouping/event consistency, plane-row and
+bank/serving-store residency). Benchmarks opt out with
+`invariants=False`.
+
 Regenerate after an intentional behavior change:
 
     PYTHONPATH=src python -m repro.testing.trace --regen tests/golden
@@ -37,7 +48,9 @@ from repro.core.baselines import FRAMEWORKS
 from repro.core.controller import ControllerConfig
 from repro.core.trainer import SharedEngine
 from repro.core.transmission import ProfileTable
-from repro.data.scenarios import FleetScenario, build_scenario
+from repro.data.scenarios import (HOSTILE_SCENARIOS, FleetScenario,
+                                  build_scenario)
+from repro.testing.invariants import InvariantChecker
 
 
 def make_engine_for(scenario: FleetScenario, arch: str = "olmo-1b"
@@ -50,15 +63,23 @@ def make_engine_for(scenario: FleetScenario, arch: str = "olmo-1b"
 def run_scenario(framework: str, scenario: FleetScenario, *,
                  engine: Optional[SharedEngine] = None,
                  windows: Optional[int] = None, seed: int = 0,
-                 trace: Optional[dict] = None, **cc_overrides):
-    """Run `framework` over `scenario` (churn events applied at window
-    boundaries). Pass `trace={}` to also fill it with the golden-trace
-    record. Returns the controller.
+                 trace: Optional[dict] = None, invariants: bool = True,
+                 **cc_overrides):
+    """Run `framework` over `scenario` (churn and bandwidth events
+    applied at window boundaries). Pass `trace={}` to also fill it
+    with the golden-trace record. Returns the controller.
 
     The scenario is deep-copied first (streams carry live rng state
     and churn events carry Stream objects the controller consumes), so
     one built scenario can be run repeatedly — under several
-    frameworks, say — and every run sees the identical fleet."""
+    frameworks, say — and every run sees the identical fleet.
+
+    `invariants`: check the window-level fleet laws
+    (repro.testing.invariants) around every window; an
+    InvariantViolation names the window and the broken contract.
+    Benchmarks chasing wall-clock pass False (the bank check drains
+    the GC per window)."""
+    own_engine = engine is None
     engine = engine or make_engine_for(scenario)
     scenario = copy.deepcopy(scenario)      # bank is shared via memo
     windows = scenario.windows if windows is None else windows
@@ -72,6 +93,9 @@ def run_scenario(framework: str, scenario: FleetScenario, *,
     ctl = FRAMEWORKS[framework](engine, list(scenario.streams), cc,
                                 seed=seed)
     ctl.warmup()
+    checker = (InvariantChecker(bank_exact=own_engine,
+                                label=f"{scenario.name}/{framework}")
+               if invariants else None)
     if trace is not None:
         trace.update({"meta": {"scenario": scenario.name,
                                "scenario_seed": scenario.seed,
@@ -80,16 +104,42 @@ def run_scenario(framework: str, scenario: FleetScenario, *,
                       "windows": []})
     jobname: Dict[str, str] = {}
     for w in range(windows):
+        churned = set()
         for ev in scenario.events_at(w):
             if ev.kind == "join" and ev.stream is not None:
+                live = {s.stream_id for s in ctl.streams}
+                if ev.stream_id in live:
+                    # a silent re-add would overwrite the stream's
+                    # detector/transmission rows and leak its old job
+                    # membership; hostile generators minting duplicate
+                    # ids must fail loudly (ISSUE 9 satellite)
+                    raise ValueError(
+                        f"scenario {scenario.name!r}: ChurnEvent joins "
+                        f"stream {ev.stream_id!r} at window {w} but it "
+                        f"is already live")
                 ctl.add_stream(ev.stream)
+                churned.add(ev.stream_id)
             elif ev.kind == "leave":
                 ctl.remove_stream(ev.stream_id)
+                churned.add(ev.stream_id)
+        for be in scenario.bandwidth_events_at(w):
+            if be.shared_bandwidth is not None:
+                ctl.cc.shared_bandwidth = float(be.shared_bandwidth)
+            if be.local_caps is not None:
+                ctl.cc.local_caps = dict(be.local_caps)
+        if checker is not None:
+            checker.before_window(ctl, churned)
         n_events = len(ctl.grouper.events)
         wm = ctl.run_window()
+        events = ctl.grouper.events[n_events:]
+        if checker is not None:
+            checker.after_window(ctl, wm, events)
         if trace is not None:
             trace["windows"].append(_window_record(
-                ctl, wm, ctl.grouper.events[n_events:], jobname))
+                ctl, wm, events, jobname))
+    if checker is not None:
+        # benches record this to prove the hostile rows ran checked
+        ctl.invariant_windows = checker.windows_checked
     return ctl
 
 
@@ -201,8 +251,61 @@ def golden_trace(framework: str, engine: Optional[SharedEngine] = None
     return trace
 
 
-def golden_path(dirpath: str, framework: str) -> str:
-    return os.path.join(dirpath, f"trace_{framework}.json")
+# Hostile-scenario goldens (ROADMAP item 3): each of the four
+# adversarial workloads pinned per framework at smoke scale — small
+# fleets, short horizons (tier-1 runs all of these), but the same
+# failure boundaries: a cohort join storm, a correlated region
+# blackout, per-window drift flips, a ~100x bandwidth collapse.
+# Files land as trace_<scenario>_<framework>.json.
+HOSTILE_GOLDEN: Dict[str, dict] = {
+    "flash_crowd_10k": dict(
+        scenario=dict(seed=0, joiners=6, base_regions=1,
+                      streams_per_region=2, join_window=1, windows=4),
+        # shortlist caps the grouper's eval fan-out exactly where the
+        # full-scale crowd needs it
+        controller=dict(shortlist_k=2)),
+    "sensor_blackout": dict(
+        scenario=dict(seed=0, regions=2, streams_per_region=2,
+                      switch_time=5.0, blackout_window=2, windows=4)),
+    "oscillating_drift": dict(
+        scenario=dict(seed=0, regions=2, streams_per_region=2,
+                      windows=4)),
+    "bandwidth_collapse": dict(
+        scenario=dict(seed=0, regions=2, streams_per_region=2,
+                      collapse_window=2, windows=4),
+        # the scenario owns the caps (collapse events rewrite them
+        # mid-run) — don't let GOLDEN_CONTROLLER's bottleneck win
+        controller=dict(shared_bandwidth=None)),
+}
+assert set(HOSTILE_GOLDEN) == set(HOSTILE_SCENARIOS)
+
+
+def hostile_scenario(name: str) -> FleetScenario:
+    return build_scenario(name, **HOSTILE_GOLDEN[name]["scenario"])
+
+
+def hostile_controller_kwargs(name: str) -> dict:
+    kw = dict(GOLDEN_CONTROLLER)
+    kw.update(HOSTILE_GOLDEN[name].get("controller", {}))
+    return {k: v for k, v in kw.items() if v is not None}
+
+
+def hostile_trace(name: str, framework: str,
+                  engine: Optional[SharedEngine] = None) -> dict:
+    """One hostile scenario run (invariants ON) -> its trace record."""
+    trace: dict = {}
+    run_scenario(framework, hostile_scenario(name), engine=engine,
+                 seed=0, trace=trace, **hostile_controller_kwargs(name))
+    return trace
+
+
+def golden_path(dirpath: str, framework: str,
+                scenario: Optional[str] = None) -> str:
+    """Golden file path; `scenario=None` is the benign drift_wave
+    golden (seed layout), a name is one of the hostile goldens."""
+    stem = (f"trace_{framework}" if scenario is None
+            else f"trace_{scenario}_{framework}")
+    return os.path.join(dirpath, f"{stem}.json")
 
 
 def regenerate(dirpath: str, frameworks=GOLDEN_FRAMEWORKS) -> List[str]:
@@ -214,6 +317,12 @@ def regenerate(dirpath: str, frameworks=GOLDEN_FRAMEWORKS) -> List[str]:
         p = golden_path(dirpath, fw)
         save_trace(tr, p)
         paths.append(p)
+    for name in HOSTILE_SCENARIOS:
+        for fw in frameworks:
+            tr = hostile_trace(name, fw, engine=engine)
+            p = golden_path(dirpath, fw, scenario=name)
+            save_trace(tr, p)
+            paths.append(p)
     return paths
 
 
@@ -230,11 +339,17 @@ def main(argv=None):
             print(f"wrote {p}")
     if args.check:
         bad = 0
-        for fw in GOLDEN_FRAMEWORKS:
-            diffs = compare(golden_trace(fw),
-                            load_trace(golden_path(args.check, fw)))
+        runs = [(None, fw) for fw in GOLDEN_FRAMEWORKS] + \
+            [(name, fw) for name in HOSTILE_SCENARIOS
+             for fw in GOLDEN_FRAMEWORKS]
+        for name, fw in runs:
+            got = (golden_trace(fw) if name is None
+                   else hostile_trace(name, fw))
+            diffs = compare(got, load_trace(
+                golden_path(args.check, fw, scenario=name)))
+            label = fw if name is None else f"{name}/{fw}"
             status = "ok" if not diffs else f"{len(diffs)} diffs"
-            print(f"{fw}: {status}")
+            print(f"{label}: {status}")
             for d in diffs:
                 print(f"  {d}")
             bad += bool(diffs)

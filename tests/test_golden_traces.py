@@ -34,6 +34,62 @@ def test_trace_matches_golden(framework, engine):
 
 
 # ---------------------------------------------------------------------------
+# hostile scenarios (ROADMAP item 3): golden-pinned at smoke scale,
+# with run_scenario's window invariants checked along the way
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("framework", T.GOLDEN_FRAMEWORKS)
+@pytest.mark.parametrize("scenario", T.HOSTILE_SCENARIOS)
+def test_hostile_trace_matches_golden(scenario, framework, engine):
+    got = T.hostile_trace(scenario, framework, engine=engine)
+    want = T.load_trace(T.golden_path(GOLDEN_DIR, framework,
+                                      scenario=scenario))
+    diffs = T.compare(got, want)
+    assert not diffs, f"{scenario}/{framework} drifted from golden " \
+        "(regenerate only if intentional):\n" + "\n".join(diffs)
+
+
+def test_hostile_goldens_exercise_their_failure_modes():
+    """The pinned trajectories must actually enter the hostile regimes
+    they were designed for — a golden of a scenario that never bites
+    pins nothing."""
+    fc = T.load_trace(T.golden_path(GOLDEN_DIR, "ecco",
+                                    scenario="flash_crowd_10k"))
+    spec = T.HOSTILE_GOLDEN["flash_crowd_10k"]["scenario"]
+    w0, wj = fc["windows"][0], fc["windows"][spec["join_window"]]
+    assert len(wj["drift"]) == len(w0["drift"]) + spec["joiners"]
+    # the cohort's correlated drift pulls it into groups
+    crowd = [s for s in fc["windows"][-1]["drift"] if "crowd" in s]
+    grouped = {m for w in fc["windows"] for ms in w["groups"].values()
+               for m in ms}
+    assert crowd and set(crowd) <= grouped
+
+    sb = T.load_trace(T.golden_path(GOLDEN_DIR, "ecco",
+                                    scenario="sensor_blackout"))
+    bw = T.HOSTILE_GOLDEN["sensor_blackout"]["scenario"][
+        "blackout_window"]
+    gone = set(sb["windows"][bw - 1]["drift"]) - \
+        set(sb["windows"][bw]["drift"])
+    assert gone and all(s.startswith("cam0") for s in gone)
+    # the doomed region had grouped before dying
+    assert gone <= {m for ms in sb["windows"][bw - 1]["groups"].values()
+                    for m in ms}
+
+    od = T.load_trace(T.golden_path(GOLDEN_DIR, "ecco",
+                                    scenario="oscillating_drift"))
+    evicts = [e for w in od["windows"] for e in w["events"]
+              if e["kind"] == "evict"]
+    assert evicts            # the flip cadence thrashes regrouping
+
+    bc = T.load_trace(T.golden_path(GOLDEN_DIR, "ecco",
+                                    scenario="bandwidth_collapse"))
+    cw = T.HOSTILE_GOLDEN["bandwidth_collapse"]["scenario"][
+        "collapse_window"]
+    pre = sum(v for v in bc["windows"][cw - 1]["bandwidth"].values())
+    post = sum(v for v in bc["windows"][cw]["bandwidth"].values())
+    assert post < pre / 20   # the collapse actually starves the fleet
+
+
+# ---------------------------------------------------------------------------
 # the comparator itself must catch what it claims to catch
 # ---------------------------------------------------------------------------
 def _base():
@@ -80,9 +136,14 @@ def test_compare_tolerates_float_wobble():
 
 
 def test_goldens_checked_in():
-    for fw in T.GOLDEN_FRAMEWORKS:
-        path = T.golden_path(GOLDEN_DIR, fw)
+    runs = [(None, fw) for fw in T.GOLDEN_FRAMEWORKS] + \
+        [(sc, fw) for sc in T.HOSTILE_SCENARIOS
+         for fw in T.GOLDEN_FRAMEWORKS]
+    for sc, fw in runs:
+        path = T.golden_path(GOLDEN_DIR, fw, scenario=sc)
         assert os.path.exists(path), f"missing golden {path}"
         tr = T.load_trace(path)
         assert tr["meta"]["framework"] == fw
+        if sc is not None:
+            assert tr["meta"]["scenario"] == sc
         assert len(tr["windows"]) == tr["meta"]["windows"]

@@ -1,0 +1,308 @@
+"""The window-level invariant harness (repro.testing.invariants):
+
+1. the checker must actually FIRE on each violation class (a harness
+   that cannot fail pins nothing), asserted against minimal duck-typed
+   fleets;
+2. `expected_shares` must re-derive ECCOAllocator.estimate_shares
+   bit-for-bit (the proportionality law is an independent
+   reimplementation, not a tautology);
+3. every benign scenario passes under every framework — drift_wave is
+   already invariant-checked by the golden suite (run_scenario checks
+   by default), the other four sweep here at smoke scale. The hostile
+   scenarios are covered by tests/test_golden_traces.py.
+"""
+import types
+
+import numpy as np
+import pytest
+
+from repro.testing import trace as T
+from repro.testing.invariants import (InvariantChecker, InvariantViolation,
+                                      expected_shares)
+
+
+# ---------------------------------------------------------------------------
+# a minimal duck-typed controller the checker accepts
+# ---------------------------------------------------------------------------
+class _Bank:
+    def __init__(self, live=0):
+        self.live = live
+
+    def compact(self):
+        pass
+
+    def __len__(self):
+        return self.live
+
+
+def _stream(sid):
+    return types.SimpleNamespace(stream_id=sid)
+
+def _job(jid, members, engine):
+    return types.SimpleNamespace(
+        job_id=jid, members=[_stream(m) for m in members], engine=engine)
+
+
+def _fake_ctl(*, streams=("a", "b"), groups={"j0": ["a", "b"]},
+              local_caps=None, shared_bandwidth=100.0, mode="ecco",
+              bank_live=None):
+    engine = types.SimpleNamespace(bank=_Bank())
+    jobs = [_job(j, ms, engine) for j, ms in groups.items()]
+    engine.bank.live = len(jobs) if bank_live is None else bank_live
+    members = [m for ms in groups.values() for m in ms]
+    return types.SimpleNamespace(
+        cc=types.SimpleNamespace(window_seconds=10.0, bytes_per_token=1.0,
+                                 local_caps=local_caps,
+                                 shared_bandwidth=shared_bandwidth),
+        bandwidth_mode=mode,
+        allocator=types.SimpleNamespace(last_gains={}),
+        streams=[_stream(s) for s in streams],
+        jobs=jobs, engine=engine,
+        fleet=types.SimpleNamespace(stream_ids=list(streams)),
+        tx_plane=types.SimpleNamespace(flow_ids=list(members)),
+        sig_index=types.SimpleNamespace(
+            state_dict=lambda: {"row": {m: 0 for m in members}}),
+        request_time={}, serve_plane=None,
+        grouper=types.SimpleNamespace())
+
+
+def _wm(ctl, *, shares=None, bandwidth={}, delivered={}, groups=None):
+    n = len(ctl.jobs)
+    return types.SimpleNamespace(
+        t=0.0,
+        shares=({j.job_id: 1.0 / n for j in ctl.jobs}
+                if shares is None else shares),
+        bandwidth=bandwidth, delivered=delivered,
+        groups=({j.job_id: [m.stream_id for m in j.members]
+                 for j in ctl.jobs} if groups is None else groups))
+
+
+def _run(ctl, wm, events=None, **kw):
+    chk = InvariantChecker(**kw)
+    chk.before_window(ctl)
+    chk.after_window(ctl, wm, events)
+    return chk
+
+
+def test_checker_accepts_a_lawful_window():
+    ctl = _fake_ctl()
+    chk = _run(ctl, _wm(ctl, bandwidth={"a": 5.0, "b": 5.0},
+                        delivered={"a": 50, "b": 49}))
+    assert chk.windows_checked == 1
+
+
+@pytest.mark.parametrize("mutate,msg", [
+    (lambda c, w: w.delivered.update(a=51), "bw"),
+    (lambda c, w: w.delivered.update(ghost=1), "no bandwidth"),
+    (lambda c, w: w.bandwidth.update(a=-1.0), "negative"),
+    (lambda c, w: w.bandwidth.update(a=200.0), "shared"),
+    (lambda c, w: w.shares.update(j0=0.9), "sum"),
+])
+def test_checker_flags_bandwidth_and_share_sums(mutate, msg):
+    ctl = _fake_ctl()
+    wm = _wm(ctl, bandwidth={"a": 5.0, "b": 5.0},
+             delivered={"a": 50, "b": 49})
+    mutate(ctl, wm)
+    with pytest.raises(InvariantViolation):
+        _run(ctl, wm)
+
+
+def test_checker_flags_local_cap_breach():
+    ctl = _fake_ctl(local_caps={"a": 2.0})
+    with pytest.raises(InvariantViolation, match="local"):
+        _run(ctl, _wm(ctl, bandwidth={"a": 3.0}))
+
+
+def test_checker_flags_disproportional_shares():
+    ctl = _fake_ctl(groups={"j0": ["a"], "j1": ["b"]})
+    ctl.allocator.last_gains = {"j0": 3.0, "j1": 1.0}
+    good = _wm(ctl, shares={"j0": 0.75, "j1": 0.25})
+    assert _run(ctl, good).windows_checked == 1
+    with pytest.raises(InvariantViolation, match="proportionality"):
+        _run(ctl, _wm(ctl, shares={"j0": 0.5, "j1": 0.5}))
+
+
+def test_checker_flags_group_inconsistencies():
+    ctl = _fake_ctl(groups={"j0": ["a"], "j1": ["b"]})
+    # a stream in two groups
+    with pytest.raises(InvariantViolation, match="both"):
+        _run(ctl, _wm(ctl, shares={"j0": 0.5, "j1": 0.5},
+                      groups={"j0": ["a", "b"], "j1": ["b"]}))
+    # wm.groups out of sync with the live jobs list
+    with pytest.raises(InvariantViolation, match="disagrees"):
+        _run(ctl, _wm(ctl, shares={"j0": 0.5, "j1": 0.5},
+                      groups={"j0": ["a"], "j1": []}))
+    # grouped stream that is not in the fleet
+    ctl2 = _fake_ctl(streams=("a",), groups={"j0": ["a", "zombie"]})
+    ctl2.fleet.stream_ids = ["a"]
+    with pytest.raises(InvariantViolation, match="not in the fleet"):
+        _run(ctl2, _wm(ctl2))
+
+
+def test_checker_flags_membership_change_without_event():
+    ctl = _fake_ctl(groups={"j0": ["a"], "j1": ["b"]})
+    chk = InvariantChecker()
+    chk.before_window(ctl)
+    # "a" silently moves j0 -> j1 with no grouping event
+    ctl.jobs[0].members = []
+    ctl.jobs[1].members = [_stream("b"), _stream("a")]
+    wm = _wm(ctl, shares={"j0": 0.5, "j1": 0.5},
+             groups={"j0": [], "j1": ["b", "a"]})
+    with pytest.raises(InvariantViolation, match="no join/new event"):
+        chk.after_window(ctl, wm, events=[])
+    # the same move WITH its event is lawful
+    chk2 = InvariantChecker()
+    chk2.before_window(_fake_ctl(groups={"j0": ["a"], "j1": ["b"]}))
+    chk2.after_window(ctl, wm, events=[
+        {"kind": "evict", "stream": "a", "job": "j0"},
+        {"kind": "join", "stream": "a", "job": "j1"}])
+
+
+def test_checker_flags_evicted_member_still_resident():
+    ctl = _fake_ctl(groups={"j0": ["a", "b"]})
+    with pytest.raises(InvariantViolation, match="evicted"):
+        _run(ctl, _wm(ctl), events=[
+            {"kind": "evict", "stream": "a", "job": "j0"},
+            {"kind": "join", "stream": "a", "job": "j0"}])
+
+
+def test_checker_flags_plane_row_leaks():
+    ctl = _fake_ctl()
+    ctl.tx_plane.flow_ids = ["a", "b", "departed"]
+    with pytest.raises(InvariantViolation, match="transmission"):
+        _run(ctl, _wm(ctl))
+    ctl = _fake_ctl()
+    ctl.fleet.stream_ids = ["a"]
+    with pytest.raises(InvariantViolation, match="detector"):
+        _run(ctl, _wm(ctl))
+    ctl = _fake_ctl()
+    ctl.request_time = {"departed": 0.0}
+    with pytest.raises(InvariantViolation, match="pending"):
+        _run(ctl, _wm(ctl))
+
+
+def test_checker_flags_bank_leaks():
+    ctl = _fake_ctl(bank_live=3)        # 1 live job, 3 live slots
+    with pytest.raises(InvariantViolation, match="leaked"):
+        _run(ctl, _wm(ctl), bank_exact=True)
+    # shared-engine mode tolerates pre-existing strangers...
+    chk = _run(ctl, _wm(ctl), bank_exact=False)
+    # ...but flags NEW strangers appearing mid-run
+    ctl.engine.bank.live = 4
+    chk.before_window(ctl)
+    with pytest.raises(InvariantViolation, match="grew"):
+        chk.after_window(ctl, _wm(ctl))
+    # fewer slots than live jobs is always broken
+    ctl.engine.bank.live = 0
+    with pytest.raises(InvariantViolation, match="live slots"):
+        _run(ctl, _wm(ctl), bank_exact=False)
+
+
+def test_checker_flags_serving_store_leak():
+    ctl = _fake_ctl()
+    ctl.serve_plane = types.SimpleNamespace(
+        store=types.SimpleNamespace(group_ids=["j0", "dead"]))
+    with pytest.raises(InvariantViolation, match="ServingStore"):
+        _run(ctl, _wm(ctl))
+
+
+def test_violation_message_names_run_and_window():
+    ctl = _fake_ctl(bank_live=9)
+    with pytest.raises(InvariantViolation,
+                       match=r"myscenario/ecco: window 0"):
+        _run(ctl, _wm(ctl), label="myscenario/ecco")
+
+
+# ---------------------------------------------------------------------------
+# expected_shares is a faithful reimplementation of estimate_shares
+# ---------------------------------------------------------------------------
+def test_expected_shares_matches_allocator_bitwise():
+    from repro.core.allocator import ECCOAllocator
+    rng = np.random.default_rng(0)
+    for trial in range(200):
+        n = int(rng.integers(1, 7))
+        jobs = [types.SimpleNamespace(job_id=f"j{i}") for i in range(n)]
+        alloc = ECCOAllocator()
+        # random gains: some jobs unknown, some negative, sometimes all
+        # nonpositive (the uniform fallback)
+        for j in jobs:
+            if rng.random() < 0.7:
+                g = float(rng.normal())
+                if rng.random() < 0.3:
+                    g = -abs(g)
+                alloc.last_gains[j.job_id] = g
+        got = alloc.estimate_shares(jobs)
+        want = expected_shares([j.job_id for j in jobs],
+                               dict(alloc.last_gains), uniform=False)
+        assert got.keys() == want.keys()
+        for k in got:
+            assert got[k] == want[k], (trial, k, got, want)
+
+
+def test_expected_shares_uniform_contract():
+    assert expected_shares(["a", "b"], {"a": 9.0}, uniform=True) == \
+        {"a": 0.5, "b": 0.5}
+    assert expected_shares([], {}, uniform=False) == {}
+
+
+# ---------------------------------------------------------------------------
+# benign scenarios x all frameworks pass the invariants at smoke scale
+# (drift_wave x all frameworks is covered by the golden suite)
+# ---------------------------------------------------------------------------
+BENIGN = {
+    "diurnal": dict(regions=2, streams_per_region=2, windows=3),
+    "camera_churn": dict(regions=1, streams_per_region=2, join_window=1,
+                         leave_window=2, windows=3, switch_time=5.0),
+    "flash_crowd": dict(regions=2, streams_per_region=2,
+                        flash_time=12.0, windows=3),
+    "bandwidth_contention": dict(regions=2, streams_per_region=2,
+                                 windows=3),
+}
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return T.make_engine_for(T.golden_scenario())
+
+
+@pytest.mark.parametrize("framework", T.GOLDEN_FRAMEWORKS)
+@pytest.mark.parametrize("name", sorted(BENIGN))
+def test_benign_scenarios_pass_invariants(name, framework, engine):
+    from repro.data.scenarios import build_scenario
+    sc = build_scenario(name, seed=0, **BENIGN[name])
+    ctl = T.run_scenario(framework, sc, engine=engine, window_micro=2,
+                         micro_steps=1, train_batch=8, p_drop=0.5)
+    assert len(ctl.history) == sc.windows
+
+
+def test_exclusive_engine_run_checks_bank_exactly():
+    """run_scenario with its own engine uses the strict JobBank
+    residency law (live slots == live jobs, every window)."""
+    from repro.data.scenarios import build_scenario
+    sc = build_scenario("diurnal", seed=0, regions=1,
+                        streams_per_region=2, windows=2)
+    ctl = T.run_scenario("ecco", sc, window_micro=2, micro_steps=1,
+                         train_batch=8)
+    assert len(ctl.history) == 2
+
+
+def test_run_scenario_invariants_opt_out(monkeypatch, engine):
+    """`invariants=False` (the benchmark fast path) must not construct
+    a checker at all."""
+    from repro.data.scenarios import build_scenario
+    calls = []
+
+    class Spy(InvariantChecker):
+        def __init__(self, **kw):
+            calls.append(kw)
+            super().__init__(**kw)
+
+    monkeypatch.setattr(T, "InvariantChecker", Spy)
+    sc = build_scenario("diurnal", seed=0, regions=1,
+                        streams_per_region=2, windows=1)
+    T.run_scenario("ecco", sc, engine=engine, window_micro=2,
+                   micro_steps=1, train_batch=8, invariants=False)
+    assert calls == []
+    T.run_scenario("ecco", sc, engine=engine, window_micro=2,
+                   micro_steps=1, train_batch=8)
+    assert len(calls) == 1 and calls[0]["bank_exact"] is False

@@ -1,5 +1,11 @@
 """RowRegistry: the shared dense-row churn discipline every batched
-plane (drift detector, transmission plane) builds on."""
+plane (drift detector, transmission plane) builds on.
+
+The hypothesis suite at the bottom drives the registry with random
+adversarial churn programs (add/remove/reserve/set_align interleaved)
+against a shadow model that maintains its own dense array via the
+reported (dst, src) moves — the exact contract every owner plane
+relies on under hostile scenarios like flash_crowd_10k."""
 import pytest
 
 from repro.core.rows import RowRegistry
@@ -44,3 +50,114 @@ def test_rows_swap_remove_reports_move():
     r.remove("d")
     assert len(r) == 0
     assert r.add("z") == (0, True)
+
+
+# ---------------------------------------------------------------------------
+# property suite: random adversarial churn vs a shadow model
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    _IDS = st.sampled_from([f"s{i}" for i in range(12)])
+    _OPS = st.lists(
+        st.one_of(
+            st.tuples(st.just("add"), _IDS),
+            st.tuples(st.just("remove"), _IDS),
+            st.tuples(st.just("reserve"), st.integers(0, 40)),
+            st.tuples(st.just("align"), st.integers(1, 8)),
+        ),
+        max_size=60)
+
+
+    def _apply(ops):
+        """Run a churn program against the registry AND a shadow that
+        maintains a dense row->payload array using only the registry's
+        reported contract: rows append at len(), removals copy src->dst."""
+        reg = RowRegistry(capacity=2)
+        arr = {}                    # row -> payload (the owner's array)
+        live = {}                   # id -> payload (the ground truth)
+        gen = reg.generation
+        for op, x in ops:
+            if op == "add":
+                row, new = reg.add(x)
+                assert new == (x not in live)
+                if new:
+                    assert row == len(reg) - 1     # dense append
+                    arr[row] = live[x] = f"payload:{x}"
+                    assert reg.generation > gen
+                else:
+                    assert arr[row] == live[x]     # idempotent: same row
+            elif op == "remove":
+                mv = reg.remove(x)
+                if x not in live:
+                    assert mv is None
+                else:
+                    dst, src = mv
+                    assert src == len(reg)         # old last row
+                    if dst != src:
+                        arr[dst] = arr[src]        # the owner's move
+                    arr.pop(src, None)
+                    del live[x]
+                    assert reg.generation > gen
+            elif op == "reserve":
+                assert reg.reserve(x) >= len(reg) + x
+            elif op == "align":
+                cap = reg.set_align(x)
+                assert cap == reg.capacity and cap % x == 0
+            gen = reg.generation
+        return reg, arr, live
+
+
+    @settings(max_examples=60, deadline=None)
+    @given(_OPS)
+    def test_rows_churn_preserves_contents(ops):
+        reg, arr, live = _apply(ops)
+        # the registry and the ground truth agree on membership...
+        assert len(reg) == len(live)
+        assert set(reg.ids) == set(live)
+        # ...and the owner's array, driven only by reported moves, holds
+        # every live id's payload at the registry's row for it
+        for rid, payload in live.items():
+            assert rid in reg
+            assert arr[reg[rid]] == payload
+        # rows are the dense prefix [0, len)
+        assert sorted(reg[r] for r in reg.ids) == list(range(len(reg)))
+        assert reg.rows_of(reg.ids) == list(range(len(reg)))
+        assert reg.rows_of(list(live) + ["absent"]) is None
+
+
+    @settings(max_examples=60, deadline=None)
+    @given(_OPS, st.integers(1, 8))
+    def test_rows_churn_preserves_shard_spans(ops, align):
+        reg, _, live = _apply(ops)
+        cap = reg.set_align(align)
+        spans = reg.shard_spans()
+        # equal contiguous blocks tiling [0, capacity) exactly
+        assert spans[0][0] == 0 and spans[-1][1] == cap
+        blk = cap // align
+        assert all(hi - lo == blk for lo, hi in spans)
+        assert all(spans[i][1] == spans[i + 1][0]
+                   for i in range(len(spans) - 1))
+        counts = reg.shard_counts()
+        assert sum(counts) == len(reg) == len(live)
+        # live rows fill the dense prefix: block loads are maximal-first
+        assert counts == sorted(counts, reverse=True)
+
+
+    @settings(max_examples=60, deadline=None)
+    @given(_OPS)
+    def test_rows_churn_is_row_order_fast_path(ops):
+        reg, _, _ = _apply(ops)
+        ids = reg.ids
+        assert reg.is_row_order(ids)
+        assert reg.is_row_order(tuple(ids))        # any sequence type
+        if len(ids) >= 2:
+            swapped = list(ids)
+            swapped[0], swapped[-1] = swapped[-1], swapped[0]
+            if swapped != ids:
+                assert not reg.is_row_order(swapped)
+            assert not reg.is_row_order(ids[:-1])  # prefix: wrong length
+        assert not reg.is_row_order(ids + ["absent"])
+except ImportError:                                    # pragma: no cover
+    pass

@@ -153,3 +153,160 @@ def test_controller_churn_end_to_end():
     # must not keep doing SGD on a distribution no live member has
     for j in ctl.jobs:
         assert not (set(j._pool_src) & left)
+
+
+# ---------------------------------------------------------------------------
+# hostile scenario generators (ROADMAP item 3)
+# ---------------------------------------------------------------------------
+def test_hostile_scenario_specs():
+    from repro.data.scenarios import HOSTILE_SCENARIOS
+    assert set(HOSTILE_SCENARIOS) <= set(SCENARIOS)
+
+    fc = build_scenario("flash_crowd_10k", seed=0)
+    joins = [e for e in fc.churn if e.kind == "join"]
+    assert len(joins) == 10_000                 # full-scale by default
+    assert len({e.stream_id for e in joins}) == len(joins)
+    assert all(e.window == joins[0].window for e in joins)
+    # the whole cohort drifts together one window after the join
+    crowd = joins[0].stream
+    w = fc.window_seconds
+    t_join, t_next = joins[0].window * w, (joins[0].window + 1) * w
+    assert crowd.region.domain_at(t_join) != \
+        crowd.region.domain_at(t_next + w)
+    small = build_scenario("flash_crowd_10k", seed=0, joiners=5)
+    assert len(small.churn) == 5                # smoke-sizable
+
+    sb = build_scenario("sensor_blackout", seed=0)
+    leaves = [e for e in sb.churn if e.kind == "leave"]
+    assert leaves and all(e.kind == "leave" for e in sb.churn)
+    doomed = {e.stream_id for e in leaves}
+    regions = {s.region.region_id for s in sb.streams
+               if s.stream_id in doomed}
+    assert len(regions) == 1                    # one whole region dies
+    assert doomed == {s.stream_id for s in sb.streams
+                      if s.region.region_id in regions}
+    # the doomed region drifts BEFORE the blackout, so it is grouped
+    blackout_t = leaves[0].window * sb.window_seconds
+    sw = [t for s in sb.streams if s.stream_id in doomed
+          for t, _ in s.region.schedule[1:]]
+    assert sw and all(t < blackout_t for t in sw)
+
+    od = build_scenario("oscillating_drift", seed=0)
+    for s in od.streams:
+        doms = [s.region.domain_at(w * 10.0 + 0.5)
+                for w in range(od.windows)]
+        assert all(a != b for a, b in zip(doms, doms[1:]))  # every window
+        assert len(set(doms)) == 2                          # two domains
+
+    bc = build_scenario("bandwidth_collapse", seed=0)
+    assert bc.profile and bc.local_caps
+    assert bc.bandwidth and bc.bandwidth[0].window > 0
+    ev = bc.bandwidth[0]
+    assert ev.shared_bandwidth < bc.shared_bandwidth / 50
+    for sid, cap in ev.local_caps.items():
+        assert cap < bc.local_caps[sid] / 50
+    rec = build_scenario("bandwidth_collapse", seed=0, recover_window=4)
+    assert rec.bandwidth[-1].shared_bandwidth == rec.shared_bandwidth
+
+
+def test_bandwidth_events_at():
+    from repro.data.scenarios import BandwidthEvent, FleetScenario
+    sc = build_scenario("drift_wave", seed=0)
+    assert sc.bandwidth_events_at(0) == []
+    ev = BandwidthEvent(window=2, shared_bandwidth=1.0)
+    sc.bandwidth.append(ev)
+    assert sc.bandwidth_events_at(2) == [ev]
+    assert sc.bandwidth_events_at(1) == []
+
+
+# ---------------------------------------------------------------------------
+# churn races: join/leave of the SAME id inside one window boundary
+# ---------------------------------------------------------------------------
+def _race_scenario(order):
+    """A tiny drift_wave fleet plus same-window churn races on top."""
+    from repro.data.streams import Region, Stream
+    sc = build_scenario("drift_wave", seed=0, regions=1,
+                        streams_per_region=2, wave_start=5.0, windows=3)
+    region = Region("race", [(0.0, 0), (5.0, 1)])
+    if order == "join_remove":
+        # a camera joins and dies at the same boundary: it must leave
+        # zero residue in any plane
+        ghost = Stream("ghost", sc.bank, region, (0.0, 0.0), seed=99)
+        sc.churn += [ChurnEvent(1, "join", "ghost", ghost),
+                     ChurnEvent(1, "leave", "ghost")]
+    else:
+        # an existing camera is replaced by a NEW stream with the SAME
+        # id at one boundary (hardware swap): planes must carry exactly
+        # one row for the id, keyed to the new stream's state
+        sid = sc.streams[0].stream_id
+        fresh = Stream(sid, sc.bank, region, (9.0, 9.0), seed=77)
+        sc.churn += [ChurnEvent(1, "leave", sid),
+                     ChurnEvent(1, "join", sid, fresh)]
+    return sc
+
+
+@pytest.mark.parametrize("order", ["join_remove", "remove_rejoin"])
+def test_controller_churn_race_planes_consistent(order):
+    from repro.serve.plane import ServeConfig
+    from repro.testing.trace import make_engine_for, run_scenario
+    sc = _race_scenario(order)
+    engine = make_engine_for(sc)
+    # serve plane ON so the race also exercises ServingStore residency;
+    # run_scenario's default invariants re-assert all of this per window
+    ctl = run_scenario("ecco", sc, engine=engine, window_micro=2,
+                       micro_steps=1, train_batch=8,
+                       serve=ServeConfig(num_slots=4, capacity=16,
+                                         max_new=2, prompt_len=4))
+    live = {s.stream_id for s in ctl.streams}
+    ids = [s.stream_id for s in ctl.streams]
+    assert len(ids) == len(set(ids))            # no duplicate rows
+    if order == "join_remove":
+        assert "ghost" not in live
+        racer = "ghost"
+    else:
+        racer = sc.streams[0].stream_id
+        assert racer in live
+        # the surviving row belongs to the REPLACEMENT stream
+        kept = [s for s in ctl.streams if s.stream_id == racer]
+        assert len(kept) == 1 and kept[0].loc == (9.0, 9.0)
+    # drift / transmission / signature / request-clock rows agree
+    assert set(ctl.fleet.stream_ids) == live
+    assert ctl.fleet.stream_ids.count(racer) <= 1
+    assert set(ctl.tx_plane.flow_ids) <= live
+    assert set(ctl.sig_index.state_dict()["row"]) <= live
+    assert set(ctl.request_time) <= live
+    members = [m.stream_id for j in ctl.jobs for m in j.members]
+    assert len(members) == len(set(members))
+    assert set(members) <= live
+    # serving rows only for live groups
+    assert set(ctl.serve_plane.store.group_ids) <= \
+        {j.job_id for j in ctl.jobs}
+    # metrics cover exactly the live fleet
+    assert set(ctl.history[-1].per_stream_acc) == live
+
+
+def test_run_scenario_rejects_duplicate_join():
+    """A ChurnEvent joining an id that is already live must fail loudly
+    instead of silently overwriting the stream's plane rows."""
+    from repro.data.streams import Region, Stream
+    from repro.testing.trace import make_engine_for, run_scenario
+    sc = build_scenario("drift_wave", seed=0, regions=1,
+                        streams_per_region=2, windows=3)
+    sid = sc.streams[0].stream_id
+    dup = Stream(sid, sc.bank, Region("dup", [(0.0, 0)]), (0.0, 0.0))
+    sc.churn.append(ChurnEvent(1, "join", sid, dup))
+    engine = make_engine_for(sc)
+    with pytest.raises(ValueError, match="already live"):
+        run_scenario("ecco", sc, engine=engine, window_micro=2,
+                     micro_steps=1, train_batch=8)
+
+
+def test_controller_add_stream_rejects_duplicate():
+    from repro.testing.trace import make_engine_for, run_scenario
+    sc = build_scenario("drift_wave", seed=0, regions=1,
+                        streams_per_region=2, windows=1)
+    engine = make_engine_for(sc)
+    ctl = run_scenario("ecco", sc, engine=engine, window_micro=2,
+                       micro_steps=1, train_batch=8)
+    with pytest.raises(ValueError, match="already live"):
+        ctl.add_stream(ctl.streams[0])
