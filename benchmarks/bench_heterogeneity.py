@@ -35,6 +35,7 @@ import numpy as np
 from benchmarks.common import Rows
 from repro.configs import smoke_config
 from repro.core.allocator import ECCOAllocator
+from repro.core.batching import engine_groups
 from repro.core.grouping import Request
 from repro.core.trainer import RetrainJob, SharedEngine
 from repro.launch.roofline import CostTable, RooflineMeter
@@ -114,9 +115,24 @@ def _run_fleet(jobs, table, budget):
         trace = alloc.run_window(jobs, WINDOW_MICRO, meter=meter)
         report = trace.budget
     # final score in fp32 for BOTH policies: the comparison must not
-    # reward bf16 fleets with a cheaper grader
-    accs = [float(np.mean([j.eval_on(m.subsamples, precision="fp32")
-                           for m in j.members])) for j in jobs]
+    # reward bf16 fleets with a cheaper grader. Graded through the
+    # batched plane API (one eval_jobs call per model class, fp32
+    # override) — bit-identical to the old per-member eval_on loop
+    # (parity test: tests/test_fleetlint.py::test_eval_jobs_precision_
+    # override_matches_scalar_loop)
+    accs = [0.0] * len(jobs)
+    for eng, idxs in engine_groups(jobs):
+        if eng is None:
+            for i in idxs:
+                # fleetlint: disable=per-member-loop -- scalar fallback
+                # for probe-rejected jobs, same as the plane dispatch
+                ma = [jobs[i].eval_on(m.subsamples, precision="fp32")
+                      for m in jobs[i].members]
+                accs[i] = float(np.mean(ma))
+            continue
+        for i, a in zip(idxs, eng.eval_jobs([jobs[i] for i in idxs],
+                                            precision="fp32")):
+            accs[i] = a
     trained = sum(1 for j in jobs if j.gpu_time > 0) / max(1, len(jobs))
     return float(np.mean(accs)), trained, report
 

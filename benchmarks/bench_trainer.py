@@ -183,6 +183,9 @@ def _train_plane(rows: Rows, engine, scalar_engine, sizes, results,
         for f, s in zip(fast, slow):
             af = engine.eval_pairs([(f, m.subsamples)
                                     for m in f.members[:1]])
+            # fleetlint: disable=per-member-loop -- the parity check's
+            # scalar REFERENCE twin: the whole point is comparing the
+            # batched plane against this exact loop
             as_ = [s.eval_on(m.subsamples) for m in s.members[:1]]
             assert af == as_, "train plane drifted from scalar loop"
         sp = t_scalar / max(t_batched, 1e-9)

@@ -224,6 +224,9 @@ def _decision_plane(rows, results, sizes, *, window_seconds=10.0,
             table, bytes_per_token=bytes_per_token)
 
         def run_scalar():
+            # fleetlint: disable=per-member-loop -- the timed scalar
+            # REFERENCE twin the batched decide_many is measured
+            # against; the speedup column is this loop's cost
             return [ctrl.decide(gpu_budget_level=levels[i],
                                 token_budget=budgets[i],
                                 p_share=float(shares[i]),

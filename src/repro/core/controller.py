@@ -580,6 +580,9 @@ class ECCOController:
         vals: List[float] = [0.0] * len(gjobs)
         for grp_eng, idxs in engine_groups(gjobs):
             if grp_eng is None:
+                # fleetlint: disable=per-member-loop -- documented
+                # scalar fallback for probe-rejected jobs; bit-identical
+                # to the batched dispatch (tests/test_trainer_bank.py)
                 for i in idxs:
                     vals[i] = gjobs[i].eval_on(evs[grouped[i]])
             else:

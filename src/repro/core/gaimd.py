@@ -54,6 +54,9 @@ def steady_state_rates(alpha, beta, local_cap, shared_cap, *,
                        steps: int = 4000, tail: int = 1000):
     """Time-averaged steady-state rate per flow (tail average)."""
     rates, _ = simulate(alpha, beta, local_cap, shared_cap, steps=steps)
+    # fleetlint: disable=host-sync -- one summary d2h at simulation
+    # end; GAIMD steady-state rates are consumed host-side by the
+    # window controller, not inside a per-flow loop
     return np.asarray(jnp.mean(rates[-tail:], axis=0))
 
 
@@ -88,6 +91,9 @@ def simulate_warm(alpha, beta, local_cap, shared_cap, *,
         rates, rf = simulate(alpha, beta, local_cap, shared_cap,
                              steps=chunk, r0=r)
         r = np.asarray(rf)
+        # fleetlint: disable=host-sync -- one convergence-check d2h per
+        # warm-up CHUNK (thousands of simulated steps), host-side by
+        # design: the tolerance test drives Python control flow
         mean = np.asarray(jnp.mean(rates, axis=0), np.float64)
         steps_run += chunk
         if prev is not None and np.abs(mean - prev).max() <= \

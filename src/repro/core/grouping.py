@@ -130,6 +130,9 @@ class Grouper:
                 accs = eng.eval_pairs([(cj, req.subsamples)
                                        for cj in cjobs])
             else:
+                # fleetlint: disable=per-member-loop -- documented
+                # scalar fallback when the probe rejects the candidate
+                # set (fake test jobs, mixed engines); bit-identical
                 accs = [cj.eval_on(req.subsamples) for cj in cjobs]
             for idx, acc_j in zip(cand_idx, accs):   # ascending: ties
                 acc_j = self._rescore(jobs[idx], req.subsamples,
@@ -175,6 +178,9 @@ class Grouper:
             cached = {(id(job), id(r)): a
                       for (job, r), a in zip(snap, accs)}
         for job in list(jobs):
+            # fleetlint: disable=per-member-loop -- eval_on only runs
+            # on the probe-rejected path (cache miss); probe-positive
+            # fleets were pre-scored by the eval_pairs call above
             for r in list(job.members):
                 key = (id(job), id(r))
                 acc_n = (cached[key] if key in cached

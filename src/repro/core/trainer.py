@@ -401,6 +401,9 @@ class JobBank:
         self.state_row_nbytes = int(sum(
             np.asarray(x).nbytes for x in leaves))
         if isinstance(template, dict) and "params" in template:
+            # fleetlint: disable=host-sync -- one-time row sizing at
+            # stack init over the HOST template (transfer accounting
+            # metadata), not a hot path
             self.params_row_nbytes = int(sum(
                 np.asarray(x).nbytes
                 for x in jax.tree.leaves(template["params"])))
@@ -434,8 +437,14 @@ class JobBank:
                     [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]),
                 self._dev)
             self._enforce_sharding()
+        # fleetlint: disable=rows-discipline -- JobBank IS the training
+        # plane's row registry (amortized doubling + swap-compaction,
+        # docs/training_plane.md); the validity bitmaps grow in
+        # lockstep with its stack
         self._host_ok = np.concatenate(
             [self._host_ok, np.zeros(pad, bool)])
+        # fleetlint: disable=rows-discipline -- as above: bank-owned
+        # bitmap, grown under the bank's own doubling discipline
         self._dev_ok = np.concatenate(
             [self._dev_ok, np.zeros(pad, bool)])
         self._cap = new_cap
@@ -574,6 +583,9 @@ class JobBank:
         scalar-fallback device call). Repeat reads are free."""
         if self._host_ok[idx]:
             return
+        # fleetlint: disable=host-sync -- this IS the residency rule's
+        # lazy mirror d2h (docs/training_plane.md): one row, only when
+        # the mirror is stale, metered via stats.d2h below
         row = jax.device_get(jax.tree.map(lambda x: x[idx], self._dev))
         for dst, src in zip(jax.tree.leaves(self._host),
                             jax.tree.leaves(row)):
@@ -820,6 +832,9 @@ class SharedEngine:
         """Top-1 next-token accuracy — the mAP analogue. `precision`
         picks the decision-plane eval dtype (docs/scheduling.md);
         "fp32" is the seed executable, bit-identical to before."""
+        # fleetlint: disable=host-sync -- the scalar decision API
+        # returns a host float by contract; batched callers use
+        # batched_accuracy, whose results cross once per chunk
         return float(self._acc_fn(precision)(params, jnp.asarray(tokens)))
 
     # -- batched eval plane -------------------------------------------------
@@ -942,21 +957,36 @@ class SharedEngine:
         cast the row inside the jitted eval (the scalar fallback does
         not go through the bank's cast-at-flush compute stack)."""
         if self.bank.resident:
+            # fleetlint: disable=host-sync -- scalar eval returns a
+            # host float by contract; the params row never crosses
+            # (device-side dynamic slice), only the scalar result does
             return float(self._acc_fn(precision)(
                 self.bank.params_row_device(idx), jnp.asarray(samples)))
         params = self.bank.read_params(idx)
         self.bank.stats.h2d(self.bank.params_row_nbytes)
         return self.accuracy(params, samples, precision=precision)
 
-    def eval_pairs(self, pairs) -> List[float]:
+    def eval_pairs(self, pairs, *,
+                   precision: Optional[str] = None) -> List[float]:
         """pairs: [(job, samples)]. Returns per-pair accuracies,
         bit-identical to [job.eval_on(s) for job, s in pairs], with
-        each distinct sample shape dispatched as one batched call."""
+        each distinct sample shape dispatched as one batched call.
+        `precision` overrides every pair's own screen dtype (the fp32
+        grading pass of mixed-precision fleets); None keeps each job's
+        decision-plane precision."""
         if not pairs:
             return []
         self.bank.compact()     # BEFORE capturing any slot index
         if not self._bank_backed([j for j, _ in pairs]):
-            return [job.eval_on(s) for job, s in pairs]
+            if precision is None:
+                # fleetlint: disable=per-member-loop -- the documented
+                # scalar fallback for probe-rejected jobs (duck-typed
+                # fakes, foreign engines); bit-identical by contract
+                return [job.eval_on(s) for job, s in pairs]
+            # fleetlint: disable=per-member-loop -- scalar fallback, as
+            # above, with the override forwarded
+            return [job.eval_on(s, precision=precision)
+                    for job, s in pairs]
         out: List[float] = [0.0] * len(pairs)
         arrs = [np.asarray(s) for _, s in pairs]
         # pairs group by (shape, decision precision): every job of an
@@ -967,8 +997,8 @@ class SharedEngine:
         # stack
         by_key: Dict[tuple, List[int]] = {}
         for i, a in enumerate(arrs):
-            by_key.setdefault((a.shape, job_precision(pairs[i][0])),
-                              []).append(i)
+            prec = precision or job_precision(pairs[i][0])
+            by_key.setdefault((a.shape, prec), []).append(i)
         stacks = {"fp32": self.bank.params_stack()}
         for (_shape, prec), idxs in by_key.items():
             stack = stacks.get(prec)
@@ -983,16 +1013,19 @@ class SharedEngine:
                 out[i] = float(a)
         return out
 
-    def eval_jobs(self, jobs) -> List[float]:
+    def eval_jobs(self, jobs, *,
+                  precision: Optional[str] = None) -> List[float]:
         """Batched RetrainJob.eval: every (member, job) subsample pair
         of `jobs` scored in one fleet call, then averaged per job with
-        the same float64 np.mean the scalar path uses."""
+        the same float64 np.mean the scalar path uses. `precision`
+        forwards the eval_pairs override (fp32 grading of mixed
+        fleets)."""
         pairs, spans = [], []
         for j in jobs:
             ms = list(j.members)
             spans.append(len(ms))
             pairs.extend((j, m.subsamples) for m in ms)
-        accs = self.eval_pairs(pairs)
+        accs = self.eval_pairs(pairs, precision=precision)
         out, k = [], 0
         for n in spans:
             out.append(float(np.mean(accs[k:k + n])) if n else 0.0)

@@ -87,6 +87,10 @@ class ProfileTable:
         if row is None:
             row = len(self._level_row)
             self._level_row[budget_level] = row
+            # fleetlint: disable=rows-discipline -- the profile matrix
+            # grows once per NEW BUDGET LEVEL (bounded by the profiler's
+            # level grid, ~5 rows), not with fleet churn; flow-indexed
+            # state in this module rides RowRegistry
             self._mat = np.concatenate(
                 [self._mat,
                  np.full((1, len(self.configs)), -np.inf, np.float64)])
@@ -414,6 +418,9 @@ class FleetTransmissionPlane:
                 self.table, bytes_per_token=self.bytes_per_token)
             tbs = ([None] * n if token_budgets is None
                    else list(token_budgets))
+            # fleetlint: disable=per-member-loop -- THE documented
+            # scalar fallback for duck-typed tables without best_many
+            # (docs/transmission_plane.md); parity-locked to decide()
             decs = [ctrl.decide(gpu_budget_level=budget_levels[i],
                                 token_budget=tbs[i],
                                 p_share=float(p_shares[i]),

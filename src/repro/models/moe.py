@@ -225,15 +225,15 @@ def apply_moe_ep(cfg: ModelConfig, p, x, mesh, *, capacity_factor: float = 1.25,
 
     batch_spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
                    None, None)
-    fn = jax.shard_map(
+    from repro.kernels._compat import shard_map
+    fn = shard_map(
         local_moe, mesh=mesh,
         in_specs=(batch_spec,
                   P(None, None),                         # router replicated
                   P(model_axis, fsdp_axis, None),        # wg
                   P(model_axis, fsdp_axis, None),        # wu
                   P(model_axis, None, fsdp_axis)),       # wd
-        out_specs=(batch_spec, P()),
-        check_vma=False)
+        out_specs=(batch_spec, P()))
     y, aux = fn(x, p["router"], p["wg"], p["wu"], p["wd"])
 
     if m.num_shared_experts:

@@ -1,0 +1,12 @@
+"""fleetlint: contract-enforcing static analysis + runtime sanitizer
+for the five planes (docs/static_analysis.md).
+
+    python -m repro.testing.fleetlint src benchmarks examples
+"""
+from repro.testing.fleetlint.engine import (Finding, Module, Pragma, Rule,
+                                            check_module, load_module,
+                                            module_from_source, run)
+from repro.testing.fleetlint.rules import default_rules
+
+__all__ = ["Finding", "Module", "Pragma", "Rule", "check_module",
+           "load_module", "module_from_source", "run", "default_rules"]

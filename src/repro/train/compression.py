@@ -103,8 +103,9 @@ def pod_mean_compressed(grads, mesh, *, scheme: str = "int8",
         def body(gl):
             return compressed_psum(gl, axis, scheme=scheme)
 
-        return jax.shard_map(body, mesh=mesh, in_specs=spec,
-                             out_specs=spec, check_vma=False)(g)
+        from repro.kernels._compat import shard_map
+        return shard_map(body, mesh=mesh, in_specs=spec,
+                         out_specs=spec)(g)
 
     return jax.tree.map(reduce_leaf, grads)
 

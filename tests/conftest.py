@@ -10,6 +10,22 @@ import numpy as np
 import pytest
 
 
+# FLEETLINT_RUNTIME=1: run the suite under the fleetlint runtime
+# sanitizer (borrow fingerprinting + transfer guard on the batched
+# decision entry points — docs/static_analysis.md). The hooks change
+# failure modes only, never values, so any suite that passes plain
+# must pass sanitized; CI runs the trainer-bank and transmission-plane
+# suites in this mode.
+if os.environ.get("FLEETLINT_RUNTIME") == "1":
+    def pytest_configure(config):
+        from repro.testing.fleetlint.runtime import install
+        install()
+
+    def pytest_unconfigure(config):
+        from repro.testing.fleetlint.runtime import uninstall
+        uninstall()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
